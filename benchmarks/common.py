@@ -1,0 +1,31 @@
+"""Shared benchmark harness: timing + default graph scale.
+
+Scale: REPRO_BENCH_SCALE (default 0.15) multiplies the nominal Table-1 sizes
+so the full matrix runs in minutes on this single CPU core; raise it on a
+bigger host.  Timing: best of REPRO_BENCH_REPEATS (default 3) after one
+warmup call (jit compilation excluded, matching the paper's method of timing
+computation only).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.15"))
+REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "3"))
+
+
+def timeit(fn, repeats: int | None = None):
+    """(best_seconds, last_result) with one warmup call."""
+    repeats = repeats or REPEATS
+    result = fn()  # warmup / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def row(name: str, seconds: float, derived) -> tuple[str, float, str]:
+    return (name, seconds * 1e6, str(derived))

@@ -1,0 +1,109 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_DRYRUN_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing harness: lower+compile a cell under config variants and
+report the roofline-term deltas vs the recorded baseline.
+
+    PYTHONPATH=src python benchmarks/perf_experiments.py \
+        --arch deepseek-v2-236b --shape train_4k --mesh single \
+        --set moe_remat=True --set moe_dispatch=scatter
+
+Appends records to dryrun_perf.json (variant name = the --set list).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from benchmarks.roofline import roofline_terms  # noqa: E402
+
+
+def parse_value(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return v == "True"
+    return v
+
+
+def run_variant(arch, shape, mesh_kind, overrides, out_path):
+    cfg = dataclasses.replace(get_config(arch), **overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "pod"))
+    variant = ",".join(f"{k}={v}" for k, v in overrides.items()) or "baseline"
+
+    import time
+    import traceback
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "variant": variant}
+    info = dryrun.SHAPES[shape]
+    n_total, n_active = cfg.params_estimate()
+    tokens = info["batch"] * (info["seq"] if info["mode"] != "decode" else 1)
+    rec["model_flops"] = float(
+        (6 if info["mode"] == "train" else 2) * n_active * tokens)
+    try:
+        t0 = time.time()
+        lowered = dryrun.build_lowered(arch, shape, mesh, cfg=cfg)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["memory"] = dryrun.memory_stats(compiled)
+        text = compiled.as_text()
+        from repro.launch.hlo_analysis import analyze_hlo
+        hc = analyze_hlo(text)
+        rec["analysis"] = {
+            "flops": hc.flops, "traffic_bytes": hc.traffic,
+            "collective_bytes": hc.collective_bytes,
+            "collectives": hc.collectives,
+        }
+        rec["ok"] = True
+        rec["roofline"] = roofline_terms(rec)
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-1500:]
+    records = []
+    if os.path.exists(out_path):
+        records = json.load(open(out_path))
+    records.append(rec)
+    json.dump(records, open(out_path, "w"), indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override, e.g. moe_remat=True")
+    ap.add_argument("--out", default="dryrun_perf.json")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+    rec = run_variant(args.arch, args.shape, args.mesh, overrides, args.out)
+    if rec.get("ok"):
+        r = rec["roofline"]
+        print(f"VARIANT {rec['variant']}")
+        print(f"  compute_s={r['compute_s']:.3f} memory_s={r['memory_s']:.3f} "
+              f"collective_s={r['collective_s']:.3f} bound={r['bottleneck']} "
+              f"MFU_bound={r['model_mfu_bound']:.4f}")
+        print(f"  temp_GB={rec['memory'].get('temp_size_in_bytes', 0)/1e9:.2f} "
+              f"compile_s={rec['compile_s']}")
+    else:
+        print("FAIL", rec.get("error"))
+
+
+if __name__ == "__main__":
+    main()

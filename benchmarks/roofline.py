@@ -1,0 +1,94 @@
+"""Roofline analysis from dry-run JSON records (TPU v5e constants).
+
+Three terms per (arch x shape x mesh) cell, in seconds per step:
+  compute   = HLO_FLOPs_per_device / peak_FLOPs            (197 TF/s bf16)
+  memory    = HBM_traffic_per_device / HBM_bw              (819 GB/s)
+  collective= collective_bytes_per_device / ICI_link_bw    (50 GB/s/link)
+
+The per-device numbers come from the trip-count-corrected HLO analysis
+(launch/hlo_analysis.py) of the SPMD-partitioned per-device module, so
+"/(chips x peak)" in the task formula is already applied: the partitioned
+module IS the 1/chips share.  ``useful_flops_ratio`` = analytic model FLOPs
+(6*N*D train, 2*N*D serve) / (HLO flops x chips): <1 means remat/padding/
+attention overhead, the waste the paper's §Roofline asks us to catch.
+"""
+from __future__ import annotations
+
+import json
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+CHIPS = {"single": 256, "pod": 512}
+
+__all__ = ["roofline_terms", "load_table", "format_table", "main"]
+
+
+def roofline_terms(rec: dict) -> dict:
+    a = rec["analysis"]
+    chips = CHIPS.get(rec.get("mesh", "single"), 256)
+    compute_s = a["flops"] / PEAK_FLOPS
+    memory_s = a["traffic_bytes"] / HBM_BW
+    collective_s = a["collective_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get).split("_")[0]
+    step_s = max(terms.values())
+    useful = rec.get("model_flops", 0.0) / max(a["flops"] * chips, 1.0)
+    # achieved fraction of the bottleneck roofline if the step ran at the
+    # max-term bound with perfect overlap of the other two terms
+    mfu = rec.get("model_flops", 0.0) / (step_s * chips * PEAK_FLOPS) \
+        if step_s > 0 else 0.0
+    return {
+        **terms,
+        "bottleneck": bottleneck,
+        "step_s_bound": step_s,
+        "useful_flops_ratio": useful,
+        "model_mfu_bound": mfu,
+    }
+
+
+def load_table(path: str) -> list[dict]:
+    with open(path) as f:
+        records = json.load(f)
+    rows = []
+    for rec in records:
+        if not rec.get("ok") or rec.get("skipped"):
+            continue
+        if "analysis" not in rec:
+            continue
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            **roofline_terms(rec),
+            "temp_gb": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+        })
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':6s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'bound':>10s} {'useful':>7s} {'MFU':>6s} {'temp_GB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:10.4f} {r['bottleneck']:>10s} "
+            f"{r['useful_flops_ratio']:7.2f} {r['model_mfu_bound']:6.3f} "
+            f"{r['temp_gb']:8.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main(path: str = "dryrun_results.json"):
+    rows = load_table(path)
+    print(format_table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")

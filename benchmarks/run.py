@@ -1,0 +1,34 @@
+"""Run every paper benchmark. Prints ``name,us_per_call,derived`` CSV.
+
+Scale via REPRO_BENCH_SCALE (default 0.15); see benchmarks/common.py.
+The roofline table (§Roofline) is separate: ``python -m benchmarks.roofline``
+consumes the dry-run JSON produced by ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks.paper import ALL_BENCHES
+
+    print("name,us_per_call,derived", flush=True)
+    for bench in ALL_BENCHES:
+        t0 = time.time()
+        try:
+            rows = bench()
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{bench.__name__},0,ERROR:{type(e).__name__}:{e}")
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        print(f"# {bench.__name__} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""csrcolor-jax: speculative-greedy sparse graph coloring (Chen/Li/Yang 2016)
+as a first-class feature of a multi-pod JAX/TPU framework.
+
+Subpackages: core (the paper's coloring engine), graphs, kernels (Pallas),
+models / configs / training / distributed / launch (the LM substrate and
+multi-pod runtime).  See README.md and DESIGN.md.
+"""
+
+__version__ = "1.0.0"

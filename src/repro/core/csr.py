@@ -1,0 +1,167 @@
+"""Compressed Sparse Row graph container (the paper's R / C arrays).
+
+The paper (§3, Fig. 2) stores the graph in CSR: ``R`` (row offsets, n+1) and
+``C`` (column indices, m).  We keep the same two arrays, plus TPU-friendly
+derived views:
+
+* ``padded_adjacency(width)`` — a dense ``(n, width)`` int32 view with the
+  sentinel ``n`` in padding slots.  Gathers through an extended color array
+  ``colors_ext`` of length ``n + 1`` (whose last slot is pinned to color 0)
+  make padding lanes inert: color 0 is "uncolored" and is never forbidden and
+  never conflicting.  This is the vector-lane analogue of CUDA's masked warp
+  lanes.
+* ``degree_buckets`` — vertex classes by degree, the data-layout analogue of
+  Merrill's thread/warp/CTA load-balancing hierarchy (§3.3 of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "CSRGraph",
+    "DeviceGraph",
+    "csr_from_edges",
+    "next_pow2",
+]
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1)."""
+    x = max(int(x), 1)
+    return 1 << (x - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Undirected sparse graph in CSR form (host-side, numpy)."""
+
+    row_offsets: np.ndarray  # (n+1,) int32/int64
+    col_indices: np.ndarray  # (m,) int32
+
+    def __post_init__(self):
+        assert self.row_offsets.ndim == 1 and self.col_indices.ndim == 1
+        assert self.row_offsets[0] == 0
+        assert self.row_offsets[-1] == self.col_indices.shape[0]
+
+    # -- basic stats ---------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.row_offsets.shape[0] - 1)
+
+    @property
+    def m(self) -> int:
+        """Number of directed edges (2x undirected edge count)."""
+        return int(self.col_indices.shape[0])
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.row_offsets).astype(np.int32)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max(initial=0))
+
+    @property
+    def avg_degree(self) -> float:
+        return self.m / max(self.n, 1)
+
+    @property
+    def degree_std(self) -> float:
+        return float(self.degrees.std())
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.col_indices[self.row_offsets[v] : self.row_offsets[v + 1]]
+
+    # -- dense views ---------------------------------------------------------
+    def padded_adjacency(self, width: int | None = None) -> np.ndarray:
+        """Dense ``(n, width)`` adjacency; padding slots hold the sentinel ``n``."""
+        n = self.n
+        width = max(self.max_degree, 1) if width is None else int(width)
+        adj = np.full((n, width), n, dtype=np.int32)
+        if self.m == 0:
+            return adj
+        deg = self.degrees
+        # fully vectorized ragged fill: position of each CSR entry within its row
+        rows = np.repeat(np.arange(n, dtype=np.int64), deg)
+        within = np.arange(self.m, dtype=np.int64) - self.row_offsets[rows]
+        keep = within < width
+        adj[rows[keep], within[keep]] = self.col_indices[keep]
+        return adj
+
+    def degree_buckets(self, thresholds: Sequence[int]) -> list[np.ndarray]:
+        """Vertex-id arrays per degree class: (0, t0], (t0, t1], ..., (tk-1, inf)."""
+        deg = self.degrees
+        out, lo = [], 0
+        bounds = list(thresholds) + [max(self.max_degree, 1)]
+        for hi in bounds:
+            ids = np.where((deg > lo) & (deg <= hi))[0].astype(np.int32)
+            out.append(ids)
+            lo = hi
+        # degree-0 vertices go to the first bucket (they take color 1 trivially)
+        zero = np.where(deg == 0)[0].astype(np.int32)
+        if zero.size:
+            out[0] = np.concatenate([zero, out[0]])
+        return out
+
+    # -- edge list view (for validation / COO ops) ---------------------------
+    def edges(self) -> tuple[np.ndarray, np.ndarray]:
+        src = np.repeat(np.arange(self.n, dtype=np.int32), self.degrees)
+        return src, self.col_indices.astype(np.int32)
+
+
+def csr_from_edges(
+    n: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    *,
+    symmetrize: bool = True,
+    dedup: bool = True,
+) -> CSRGraph:
+    """Build a clean CSR graph from an edge list.
+
+    Drops self loops; optionally symmetrizes (undirected) and deduplicates.
+    Adjacency lists come out sorted, matching the UF-collection convention.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    if dedup and src.size:
+        key = src * n + dst
+        key = np.unique(key)
+        src, dst = key // n, key % n
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    row_offsets = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(row_offsets, src + 1, 1)
+    row_offsets = np.cumsum(row_offsets)
+    return CSRGraph(row_offsets.astype(np.int64), dst.astype(np.int32))
+
+
+class DeviceGraph:
+    """Device-side padded-adjacency graph used by the JAX coloring kernels.
+
+    ``adj``      (n, D) int32, sentinel = n in padding lanes
+    ``degrees``  (n+1,) int32, sentinel slot holds 0
+    """
+
+    def __init__(self, adj, degrees, n: int):
+        self.adj = adj
+        self.degrees = degrees
+        self.n = int(n)
+        self.D = int(adj.shape[1])
+
+    @classmethod
+    def from_csr(cls, g: CSRGraph, width: int | None = None) -> "DeviceGraph":
+        import jax.numpy as jnp
+
+        adj = jnp.asarray(g.padded_adjacency(width))
+        deg = jnp.asarray(
+            np.concatenate([g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
+        )
+        return cls(adj, deg, g.n)

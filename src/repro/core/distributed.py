@@ -1,0 +1,140 @@
+"""Multi-device speculative-greedy coloring (beyond-paper: pod-scale SGR).
+
+The paper targets one GPU.  To run coloring at pod scale we partition vertices
+into contiguous per-device ranges with ``shard_map`` over a 1-D device mesh:
+
+* every device owns its vertex range's colors, worklist and adjacency rows;
+* each super-step: ``all_gather`` the color array (neighbors may live on any
+  device), FirstFit the local worklist, ``all_gather`` again (conflict
+  detection must see post-FirstFit colors — the cross-device analogue of the
+  paper's global barrier between kernels), resolve conflicts with the degree
+  heuristic, clear losers, compact locally.
+
+Communication is 2 all-gathers of the n-vertex color array per super-step;
+super-step counts match the single-device algorithm (the math is identical).
+A documented optimization (EXPERIMENTS.md §Perf) replaces the all-gather with
+boundary-halo exchange: only colors of vertices with cross-partition edges
+(typically <<n for good partitions) need to move.
+
+Padding vertices (to make n divisible by the device count) are isolated
+(degree 0): they take color 1 in round one and never conflict.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.coloring import ColoringResult
+from repro.core.csr import CSRGraph
+from repro.core.firstfit import firstfit_bitset
+from repro.core.heuristics import conflict_lose_flags
+
+__all__ = ["color_distributed"]
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def _build_step(mesh, n_pad: int, n_loc: int, heuristic: str):
+    def step(adj_loc, deg_ext, colors_loc, wl_loc):
+        # ---- exchange colors (pre-FirstFit view) --------------------------
+        colors_full = jax.lax.all_gather(colors_loc, "d", tiled=True)
+        colors_ext = jnp.concatenate([colors_full, jnp.zeros(1, jnp.int32)])
+
+        offset = jax.lax.axis_index("d").astype(jnp.int32) * n_loc
+        lidx = wl_loc - offset  # local row of each worklist vertex
+        valid = wl_loc < n_pad
+        # sentinel entries scatter out of range (dropped) instead of clipping
+        # onto a real row, which would race the valid writes
+        sidx = jnp.where(valid, lidx, n_loc)
+        rows = adj_loc[jnp.clip(lidx, 0, n_loc - 1)]
+        rows = jnp.where(valid[:, None], rows, n_pad)
+
+        # ---- FirstFit (speculative, bitset) -------------------------------
+        nc = colors_ext[rows]
+        c = firstfit_bitset(nc)
+        colors_loc = colors_loc.at[sidx].set(c, mode="drop")
+
+        # ---- global barrier: conflict detection sees post-FF colors -------
+        colors_full = jax.lax.all_gather(colors_loc, "d", tiled=True)
+        colors_ext = jnp.concatenate([colors_full, jnp.zeros(1, jnp.int32)])
+        my_c = colors_ext[wl_loc]
+        nc = colors_ext[rows]
+        my_d = deg_ext[wl_loc]
+        nd = deg_ext[rows]
+        lose = conflict_lose_flags(wl_loc, rows, my_c, nc, my_d, nd, heuristic)
+
+        # ---- color clearing + local compaction ----------------------------
+        colors_loc = colors_loc.at[jnp.where(lose & valid, sidx, n_loc)].set(
+            0, mode="drop"
+        )
+        pos = jnp.cumsum(lose.astype(jnp.int32)) - 1
+        new_wl = jnp.full_like(wl_loc, n_pad)
+        new_wl = new_wl.at[jnp.where(lose, pos, wl_loc.shape[0])].set(
+            wl_loc, mode="drop"
+        )
+        return colors_loc, new_wl, jnp.sum(lose.astype(jnp.int32))[None]
+
+    return jax.jit(
+        _shard_map(
+            step,
+            mesh,
+            in_specs=(P("d", None), P(), P("d"), P("d")),
+            out_specs=(P("d"), P("d"), P("d")),
+        )
+    )
+
+
+def color_distributed(
+    g: CSRGraph,
+    *,
+    devices=None,
+    heuristic: str = "degree",
+    max_iters: int | None = None,
+) -> ColoringResult:
+    devices = devices if devices is not None else jax.devices()
+    ndev = len(devices)
+    mesh = Mesh(np.asarray(devices), ("d",))
+    n = g.n
+    n_pad = ((n + ndev - 1) // ndev) * ndev
+    n_loc = n_pad // ndev
+    max_iters = max_iters or n + 1
+
+    adj_np = g.padded_adjacency()
+    # remap the sentinel n -> n_pad and pad rows for the padding vertices
+    adj_np = np.where(adj_np == n, n_pad, adj_np)
+    if n_pad > n:
+        adj_np = np.concatenate(
+            [adj_np, np.full((n_pad - n, adj_np.shape[1]), n_pad, np.int32)]
+        )
+    deg_ext = np.zeros(n_pad + 1, np.int32)
+    deg_ext[:n] = g.degrees
+
+    shard_rows = NamedSharding(mesh, P("d", None))
+    shard_vec = NamedSharding(mesh, P("d"))
+    adj = jax.device_put(jnp.asarray(adj_np), shard_rows)
+    deg = jax.device_put(jnp.asarray(deg_ext), NamedSharding(mesh, P()))
+    colors = jax.device_put(jnp.zeros(n_pad, jnp.int32), shard_vec)
+    wl = jax.device_put(jnp.arange(n_pad, dtype=jnp.int32), shard_vec)
+
+    step = _build_step(mesh, n_pad, n_loc, heuristic)
+    count, iters = n_pad, 0
+    while count > 0 and iters < max_iters:
+        colors, wl, counts = step(adj, deg, colors, wl)
+        count = int(jnp.sum(counts))
+        iters += 1
+
+    colors_np = np.asarray(colors)[:n]
+    return ColoringResult(
+        colors_np,
+        iters,
+        work_items=iters * n_pad,
+        padded_work=iters * n_pad,
+        converged=count == 0,
+        algorithm=f"distributed_sgr_{ndev}dev",
+    )

@@ -1,0 +1,46 @@
+"""Conflict-resolve policies (paper Alg. 5 and §3.2 heuristic).
+
+Given a speculative coloring, a conflict is an edge whose endpoints share a
+color; exactly one endpoint must "lose" (be cleared and re-queued).  The loser
+rule is the paper's key quality/convergence lever:
+
+* ``id``     — baseline (Alg. 2 l.14 / Alg. 5 l.3): the *smaller id* loses.
+* ``degree`` — §3.2 heuristic: the *smaller degree* loses (large-degree
+               vertices are more likely to cause future conflicts, so they
+               keep their color); ties → the smaller id keeps (larger loses).
+
+Both rules are total orders over vertices, so every conflicting pair has
+exactly one loser and the maximum-priority vertex of any conflict component
+never loses — guaranteeing progress each iteration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["conflict_lose_flags", "HEURISTICS"]
+
+HEURISTICS = ("id", "degree")
+
+
+def conflict_lose_flags(
+    ids: jax.Array,          # (w,)   worklist vertex ids (sentinel n allowed)
+    neigh_ids: jax.Array,    # (w, W) padded neighbor ids (sentinel n in pads)
+    my_colors: jax.Array,    # (w,)   colors of ids (0 for sentinel)
+    neigh_colors: jax.Array, # (w, W) colors of neighbors (0 in pads)
+    my_deg: jax.Array,       # (w,)
+    neigh_deg: jax.Array,    # (w, W)
+    heuristic: str,
+) -> jax.Array:
+    """True where the worklist vertex loses a conflict and must recolor."""
+    same = (neigh_colors == my_colors[:, None]) & (my_colors[:, None] > 0)
+    if heuristic == "id":
+        lose_lane = same & (ids[:, None] < neigh_ids)
+    elif heuristic == "degree":
+        dv = my_deg[:, None]
+        lose_lane = same & (
+            (neigh_deg > dv) | ((neigh_deg == dv) & (neigh_ids < ids[:, None]))
+        )
+    else:
+        raise ValueError(f"unknown heuristic {heuristic!r}; options: {HEURISTICS}")
+    return jnp.any(lose_lane, axis=1)

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    act_spec,
+    batch_shardings,
+    cache_shardings,
+    param_spec,
+    state_shardings,
+)
+
+__all__ = [
+    "param_spec",
+    "act_spec",
+    "batch_shardings",
+    "cache_shardings",
+    "state_shardings",
+]

@@ -1,0 +1,80 @@
+"""Fault tolerance & elasticity policy for pod-scale runs.
+
+Mechanisms shipped here (all exercised by tests/test_checkpoint.py):
+
+* ``run_with_restarts`` — supervisor loop: run the training function, on any
+  exception restore from the last checkpoint and continue, up to
+  ``max_restarts``.  Combined with the stateless data pipeline (pure function
+  of the step index) a restart reproduces the uninterrupted trajectory
+  exactly.
+* ``reshard_state`` — elastic scaling: map a checkpointed state onto a NEW
+  mesh (grow/shrink the fleet between restarts).  Restore is sharding-aware
+  (training/checkpoint.py) so each host only materializes its own shards.
+
+At 1000+ node scale the remaining pieces are host-level and documented here
+for the deployment runbook:
+* straggler mitigation — synchronous SPMD steps bound each step by the
+  slowest chip; the mitigations are (a) deterministic, load-balanced sharding
+  (the resolver never leaves ragged shards), (b) asynchronous checkpoint
+  writes (snapshot to host memory, persist off the critical path), and
+  (c) preemption signals (SIGTERM) triggering an immediate checkpoint —
+  wired in ``install_preemption_handler``.
+* failure detection — the JAX runtime surfaces missing peers as collective
+  timeouts; the supervisor treats any step exception as a restart trigger.
+"""
+from __future__ import annotations
+
+import signal
+from typing import Callable
+
+import jax
+
+from repro.training.checkpoint import latest_step, restore_checkpoint
+from repro.distributed.sharding import state_shardings
+
+__all__ = ["run_with_restarts", "reshard_state", "install_preemption_handler"]
+
+
+def run_with_restarts(
+    run_fn: Callable[[int], dict],
+    *,
+    ckpt_dir: str,
+    max_restarts: int = 3,
+) -> dict:
+    """Run ``run_fn(start_step)``; on failure, restart from the checkpoint.
+
+    ``run_fn`` must checkpoint to ``ckpt_dir`` itself (see launch/train.py)
+    and accept the step to resume from.
+    """
+    attempts = 0
+    while True:
+        start = latest_step(ckpt_dir) or 0
+        try:
+            return run_fn(start)
+        except Exception:
+            attempts += 1
+            if attempts > max_restarts:
+                raise
+            print(f"[ft] failure (attempt {attempts}/{max_restarts}); "
+                  f"restarting from step {latest_step(ckpt_dir) or 0}")
+
+
+def reshard_state(ckpt_dir: str, step: int, state_like, new_mesh):
+    """Elastic restore: place a checkpoint onto a different mesh."""
+    shardings = state_shardings(
+        jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state_like
+        ),
+        new_mesh,
+    )
+    return restore_checkpoint(ckpt_dir, step, state_like, shardings=shardings)
+
+
+def install_preemption_handler(save_fn: Callable[[], None]):
+    """SIGTERM -> checkpoint immediately (cloud preemption notice)."""
+    def handler(signum, frame):
+        print("[ft] preemption signal received; checkpointing")
+        save_fn()
+        raise SystemExit(143)
+
+    signal.signal(signal.SIGTERM, handler)

@@ -1,0 +1,27 @@
+from repro.graphs.rmat import rmat
+from repro.graphs.generators import (
+    erdos_renyi,
+    grid2d,
+    grid3d,
+    honeycomb,
+    power_law,
+    road,
+    small_world,
+    stencil27,
+)
+from repro.graphs.suite import SUITE, build_graph, build_suite
+
+__all__ = [
+    "rmat",
+    "erdos_renyi",
+    "grid2d",
+    "grid3d",
+    "honeycomb",
+    "power_law",
+    "road",
+    "small_world",
+    "stencil27",
+    "SUITE",
+    "build_graph",
+    "build_suite",
+]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+* firstfit/ — bitset FirstFit (packed forbidden-color words + structural
+  find-first-set), the paper's §3.2 "Bitset Operation" on the MXU-era VPU.
+* conflict/ — ConflictResolve detection with the §3.2 degree heuristic.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper; interpret=True off-TPU) and ref.py (independent
+pure-jnp oracle); tests/test_kernels.py sweeps shapes/dtypes/block sizes.
+EXAMPLE.md documents the layer contract.
+"""

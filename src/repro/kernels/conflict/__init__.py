@@ -1,0 +1,3 @@
+from repro.kernels.conflict.ops import conflict_tpu
+
+__all__ = ["conflict_tpu"]

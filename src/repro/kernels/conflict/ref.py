@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the conflict-detect kernel.
+
+Re-derives the loser rule directly from the paper's text, independent of both
+the kernel and ``core.heuristics`` (which is itself oracle-checked in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["conflict_ref"]
+
+
+def conflict_ref(ids, nid, my_c, nc, my_d, nd, heuristic: str) -> jax.Array:
+    same = (nc == my_c[:, None]) & (my_c[:, None] > 0)
+    if heuristic == "id":
+        lose = same & (ids[:, None] < nid)
+    elif heuristic == "degree":
+        lose = same & (
+            (nd > my_d[:, None]) | ((nd == my_d[:, None]) & (nid < ids[:, None]))
+        )
+    else:
+        raise ValueError(heuristic)
+    return jnp.any(lose, axis=1)

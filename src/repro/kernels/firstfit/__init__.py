@@ -1,0 +1,3 @@
+from repro.kernels.firstfit.ops import firstfit_bitset_tpu
+
+__all__ = ["firstfit_bitset_tpu"]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the bitset FirstFit kernel.
+
+Deliberately *independent* of both the kernel and the production
+``core.firstfit`` implementations: candidate membership is checked by direct
+(quadratic) comparison, the most obviously-correct formulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["firstfit_ref"]
+
+
+def firstfit_ref(neigh_colors: jax.Array) -> jax.Array:
+    """Smallest color in [1, W+1] not present among each row's neighbors."""
+    w, W = neigh_colors.shape
+    cand = jnp.arange(1, W + 2, dtype=neigh_colors.dtype)       # (C,)
+    forbidden = (neigh_colors[:, None, :] == cand[None, :, None]).any(-1)
+    return (jnp.argmax(~forbidden, axis=1) + 1).astype(jnp.int32)

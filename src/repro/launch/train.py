@@ -1,0 +1,136 @@
+"""End-to-end training driver.
+
+Runs real training (CPU-scale or TPU-scale — same code path): synthetic data
+pipeline, AdamW, checkpoint/restart with ``--resume auto``, periodic metrics.
+On a multi-device fleet pass ``--mesh dxm`` to shard with the production
+sharding rules; on this container it runs single-device reduced configs
+(see examples/train_lm.py for the ~100M-param end-to-end run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import batch_shardings, state_shardings
+from repro.models import build_model
+from repro.training import AdamWConfig, init_train_state, make_train_step
+from repro.training.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.training.data import SyntheticData
+
+__all__ = ["train_loop", "main"]
+
+
+def train_loop(
+    cfg,
+    *,
+    steps: int,
+    batch_size: int,
+    seq_len: int,
+    lr: float = 3e-4,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 100,
+    resume: bool = False,
+    mesh=None,
+    log_every: int = 10,
+    seed: int = 0,
+    fail_at_step: int | None = None,
+) -> dict:
+    """Returns summary metrics. ``fail_at_step`` injects a crash (FT tests)."""
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(peak_lr=lr, warmup_steps=min(50, steps // 10 + 1),
+                          total_steps=steps)
+    data = SyntheticData.for_model(cfg, batch_size, seq_len, seed=seed)
+
+    state = init_train_state(model, jax.random.PRNGKey(seed))
+    start_step = 0
+    if resume and ckpt_dir and (last := latest_step(ckpt_dir)) is not None:
+        shardings = state_shardings(state, mesh) if mesh else None
+        state = restore_checkpoint(ckpt_dir, last, state, shardings=shardings)
+        start_step = last
+        print(f"[train] resumed from step {last}")
+
+    step_fn = make_train_step(model, opt_cfg)
+    if mesh is not None:
+        st_sh = state_shardings(jax.eval_shape(lambda: state), mesh)
+        b_sh = batch_shardings(
+            jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), data.batch(0)
+            ),
+            mesh,
+        )
+        step_fn = jax.jit(step_fn, in_shardings=(st_sh, b_sh), donate_argnums=(0,))
+        state = jax.device_put(state, st_sh)
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        if fail_at_step is not None and step == fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            print(
+                f"[train] step {step + 1}/{steps} loss={loss:.4f} "
+                f"ce={float(metrics['ce']):.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} "
+                f"lr={float(metrics['lr']):.2e}",
+                flush=True,
+            )
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, jax.device_get(state))
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, jax.device_get(state))
+    dt = time.time() - t0
+    return {
+        "final_loss": losses[-1] if losses else None,
+        "first_loss": losses[0] if losses else None,
+        "losses": losses,
+        "steps": steps - start_step,
+        "wall_s": dt,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", choices=("auto", "never"), default="never")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    summary = train_loop(
+        cfg,
+        steps=args.steps,
+        batch_size=args.batch,
+        seq_len=args.seq,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        resume=args.resume == "auto",
+        seed=args.seed,
+    )
+    print(json.dumps({k: v for k, v in summary.items() if k != "losses"}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,222 @@
+"""Common transformer building blocks (pure JAX, dict-pytree params).
+
+Conventions:
+* params are nested dicts of jnp arrays; layer stacks hold leaves with a
+  leading ``L`` axis consumed by ``lax.scan`` (constant compile time in depth);
+* activations run in ``cfg.act_dtype``; norms/softmax accumulate in fp32;
+* attention is q-chunked (scan over query blocks) above ``cfg.attn_q_chunk``
+  so prefill_32k never materializes an (S x S) score tensor.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+__all__ = [
+    "dense_init",
+    "linear",
+    "norm_apply",
+    "norm_init",
+    "rope_apply",
+    "attention",
+    "mlp_init",
+    "mlp_apply",
+    "use_sharding_mesh",
+    "shard_heads",
+]
+
+# Mesh context for activation-sharding constraints inside attention.  Set by
+# Model methods (see model.py) at trace time; None on single-device runs.
+_MESH_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_mesh",
+                                                           default=None)
+
+
+@contextlib.contextmanager
+def use_sharding_mesh(mesh):
+    tok = _MESH_CTX.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH_CTX.reset(tok)
+
+
+def shard_heads(x):
+    """Constrain (B, S, H, D): batch->(pod,data), heads->model (else D)."""
+    mesh = _MESH_CTX.get()
+    if mesh is None or x.ndim != 4:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    msize = mesh.shape.get("model", 1)
+    B, S, H, D = x.shape
+    spec: list = [None, None, None, None]
+    if B % dsize == 0 and B > 1:
+        spec[0] = daxes
+    elif S % dsize == 0 and S >= dsize:
+        spec[1] = daxes
+    if H % msize == 0 and H >= msize:
+        spec[2] = "model"
+    elif D % msize == 0 and D >= msize:
+        spec[3] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# init / linear
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (std = 1/sqrt(fan_in) unless given)."""
+    fan_in = shape[0] if len(shape) == 1 else int(np.prod(shape[:-1]))
+    std = scale if scale is not None else 1.0 / max(fan_in, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+            ).astype(dtype)
+
+
+def linear(x, w):
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mean) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mean) * lax.rsqrt(var + eps)
+    out = xf * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _head_rmsnorm(x, scale, eps: float = 1e-6):
+    """qk_norm (Qwen3): RMSNorm over head_dim, scale shared across heads."""
+    xf = x.astype(jnp.float32)
+    xf = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_apply(x, positions, theta: float):
+    """Rotate (..., S, H, D) by absolute ``positions`` (shape (S,))."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = (1.0 / theta) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA/MQA, causal / bidirectional / sliding-window, q-chunked)
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, q_pos, k_pos, causal, window, scale):
+    """q (B,Sq,H,D), k (B,Sk,H,D), v (B,Sk,H,Dv) -> (B,Sq,H,Dv).
+
+    Heads are pre-expanded to Hq (GQA kv repeated) so every tensor including
+    the fp32 score block shards over "model" on the heads axis — the Megatron
+    TP layout; without it the (B,H,Sq,Sk) block replicates 16x.
+    """
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    valid = (k_pos >= 0)[None, :]                       # (1, Sk); -1 = unfilled
+    if causal:
+        valid = valid & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        valid = valid & (q_pos[:, None] - k_pos[None, :] < window)
+    scores = jnp.where(valid[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (e.g. empty cache at pos 0) -> zero output, not uniform
+    any_valid = jnp.any(valid, axis=-1)                 # (Sq,) or (1,)
+    probs = probs * any_valid[None, None, :, None]
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def attention(
+    q,                    # (B, Sq, Hq, D)
+    k,                    # (B, Sk, Hkv, D)
+    v,                    # (B, Sk, Hkv, Dv)
+    *,
+    q_pos,                # (Sq,) absolute positions
+    k_pos,                # (Sk,) absolute positions; -1 marks unfilled slots
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 1024,
+    scale: float | None = None,
+    chunk_remat: bool = False,
+):
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    if G > 1:  # expand kv to Hq heads: fully head-shardable attention
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    q, k, v = shard_heads(q), shard_heads(k), shard_heads(v)
+
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        out = _attend_block(q, k, v, q_pos, k_pos, causal, window, scale)
+    else:
+        nch = Sq // q_chunk
+        qs = q.reshape(B, nch, q_chunk, Hq, D).transpose(1, 0, 2, 3, 4)
+        ps = q_pos.reshape(nch, q_chunk)
+
+        def body(_, xs):
+            qc, pc = xs
+            return None, _attend_block(qc, k, v, pc, k_pos, causal, window, scale)
+
+        if chunk_remat:
+            # §Perf: otherwise the chunk scan saves every chunk's fp32 score
+            # block (nch, B, H, qc, Sk) for its backward pass
+            body = jax.checkpoint(body)
+        _, outs = lax.scan(body, None, (qs, ps))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, -1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs (SwiGLU for silu, plain 2-layer for gelu)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d, d_ff, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "silu":
+        return {
+            "w_gate": dense_init(ks[0], (d, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d), dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d), dtype),
+    }
+
+
+def mlp_apply(p, x, act: str):
+    if act == "silu":
+        return linear(jax.nn.silu(linear(x, p["w_gate"])) * linear(x, p["w_up"]),
+                      p["w_down"])
+    return linear(jax.nn.gelu(linear(x, p["w_up"])), p["w_down"])

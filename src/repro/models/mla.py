@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries go through a low-rank bottleneck (q_lora); keys/values are compressed
+into a per-token latent ``c_kv`` (kv_lora wide) plus one shared decoupled RoPE
+key (qk_rope_dim).  Scoring width = qk_nope + qk_rope per head.
+
+Two execution paths:
+* ``mla_attention``        — train/prefill: decompress K/V per head and run
+                              standard chunked attention.
+* ``mla_decode_absorbed``  — decode: the famous MLA inference trick.  The
+                              per-head up-projections are *absorbed* into the
+                              query / output sides, so attention scores and
+                              context are computed directly against the
+                              (B, T, kv_lora + rope) compressed cache — the
+                              cache stays 576-wide regardless of 128 heads,
+                              which is what makes decode_32k / long caches fit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention, dense_init, norm_apply, norm_init, rope_apply
+
+__all__ = ["mla_init", "mla_project_qkv", "mla_attention", "mla_decode_absorbed"]
+
+
+def mla_init(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], (d, cfg.q_lora), dtype),
+        "q_norm": norm_init(cfg.q_lora, "rmsnorm", dtype),
+        "wq_b": dense_init(ks[1], (cfg.q_lora, H * (dn + dr)), dtype),
+        "wkv_a": dense_init(ks[2], (d, cfg.kv_lora + dr), dtype),
+        "kv_norm": norm_init(cfg.kv_lora, "rmsnorm", dtype),
+        "wk_b": dense_init(ks[3], (cfg.kv_lora, H * dn), dtype),
+        "wv_b": dense_init(ks[4], (cfg.kv_lora, H * dv), dtype),
+        "wo": dense_init(ks[5], (H * dv, d), dtype),
+    }
+
+
+def mla_project_qkv(p, x, positions, cfg):
+    """Shared projections. Returns (q_nope, q_rope, c_kv, k_rope)."""
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype))
+    q = norm_apply(p["q_norm"], q, "rmsnorm")
+    q = jnp.einsum("bsr,re->bse", q, p["wq_b"].astype(x.dtype))
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope_apply(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = ckv[..., : cfg.kv_lora], ckv[..., cfg.kv_lora :]
+    c_kv = norm_apply(p["kv_norm"], c_kv, "rmsnorm")
+    k_rope = rope_apply(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(p, x, positions, cfg, *, k_pos=None):
+    """Train/prefill path: decompress and run standard attention."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = mla_project_qkv(p, x, positions, cfg)
+
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, p["wk_b"].astype(x.dtype))
+    k_nope = k_nope.reshape(B, S, H, dn)
+    v = jnp.einsum("bsr,re->bse", c_kv, p["wv_b"].astype(x.dtype))
+    v = v.reshape(B, S, H, dv)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, dr))],
+                        axis=-1)
+    out = attention(
+        q, k, v,
+        q_pos=positions,
+        k_pos=positions if k_pos is None else k_pos,
+        causal=cfg.causal,
+        window=cfg.window,
+        q_chunk=cfg.attn_q_chunk,
+        scale=(dn + dr) ** -0.5,
+        chunk_remat=cfg.attn_chunk_remat,
+    )
+    out = out.reshape(B, S, H * dv)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype)), (c_kv, k_rope)
+
+
+def mla_decode_absorbed(p, x, pos, cache_ckv, cache_krope, k_pos, cfg):
+    """Decode path against the compressed cache (absorption trick).
+
+    x (B, 1, d); cache_ckv (B, T, kv_lora); cache_krope (B, T, dr).
+    Returns (out (B, 1, d), new c_kv row, new k_rope row).
+    """
+    B = x.shape[0]
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    R = cfg.kv_lora
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = mla_project_qkv(p, x, positions, cfg)
+
+    # write the new token into the cache view used for scoring
+    cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, c_kv_new, (0, pos, 0))
+    cache_krope = jax.lax.dynamic_update_slice(cache_krope, k_rope_new, (0, pos, 0))
+
+    # absorb wk_b into the query: q_lat (B, H, R)
+    wk_b = p["wk_b"].astype(x.dtype).reshape(R, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b)
+
+    scores = jnp.einsum("bhr,btr->bht", q_lat, cache_ckv)
+    scores = scores + jnp.einsum("bhd,btd->bht", q_rope[:, 0], cache_krope)
+    scores = scores.astype(jnp.float32) * (dn + dr) ** -0.5
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+
+    ctx = jnp.einsum("bht,btr->bhr", probs, cache_ckv)       # latent context
+    wv_b = p["wv_b"].astype(x.dtype).reshape(R, H, dv)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, wv_b).reshape(B, 1, H * dv)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    return out, cache_ckv, cache_krope

@@ -1,0 +1,224 @@
+"""Top-k routed Mixture-of-Experts with token-chunked GShard dispatch.
+
+Design notes (DESIGN.md §5):
+* dispatch/combine are the classic one-hot einsum formulation — it SPMD-
+  partitions predictably (token dim over "data", expert dim over "model" when
+  divisible) — but evaluated under a ``lax.scan`` over token chunks of
+  ``cfg.moe_chunk`` so the (tokens x experts x capacity) transient stays
+  bounded regardless of batch x seq;
+* capacity is per chunk: C = ceil(chunk * top_k * capacity_factor / E);
+  overflowing tokens are dropped (pass through the residual stream), the
+  standard "dropping" MoE semantics;
+* router: softmax over all experts -> top-k -> renormalized gates; an
+  auxiliary load-balance loss (Switch-style) and router z-loss are returned.
+* shared experts (DeepSeek-V2) run densely on every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg, dtype):
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype, scale=0.02),
+        "w_gate": dense_init(ks[1], (E, d, ff), dtype),
+        "w_up": dense_init(ks[2], (E, d, ff), dtype),
+        "w_down": dense_init(ks[3], (E, ff, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(
+            ks[4], d, ff * cfg.n_shared_experts, "silu", dtype
+        )
+    return p
+
+
+def _route(p, xc, cfg):
+    """Router + per-choice expert slot positions. Shared by both dispatchers."""
+    Nc, _ = xc.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, -(-int(Nc * k * cfg.capacity_factor) // E))
+    logits = jnp.einsum("nd,de->ne", xc, p["router"].astype(xc.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, k)            # (Nc, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    iota_e = jnp.arange(E, dtype=jnp.int32)
+    base = jnp.zeros((E,), jnp.int32)
+    routes = []
+    for j in range(k):                                     # choice-major priority
+        e_j = expert_idx[:, j]
+        oh_e = (e_j[:, None] == iota_e[None, :])           # (Nc, E)
+        pos = jnp.cumsum(oh_e.astype(jnp.int32), axis=0) - 1 + base[None, :]
+        pos_tok = jnp.sum(jnp.where(oh_e, pos, 0), axis=1)  # (Nc,)
+        base = base + jnp.sum(oh_e.astype(jnp.int32), axis=0)
+        routes.append((e_j, pos_tok, pos_tok < C))
+    # aux-loss stats
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (expert_idx[:, 0][:, None] == iota_e[None, :]).astype(jnp.float32), axis=0
+    )
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return C, gate_vals, routes, lb_loss, z_loss
+
+
+def _experts_ffn(p, xe, dtype):
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(dtype))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dtype))
+
+
+def _chunk_moe(p, xc, cfg):
+    """One token chunk: (Nc, d) -> (Nc, d), plus aux-loss stats.
+
+    Two dispatchers (cfg.moe_dispatch):
+    * "einsum"  — GShard one-hot (Nc, E, C) dispatch/combine masks.  SPMD-
+                  predictable (contraction -> all-reduce over data) but moves
+                  O(Nc*E*C) mask bytes per chunk.
+    * "scatter" — index-based: tokens scatter-add into the (E*C, d) buffer and
+                  gather back.  O(Nc*d*k) traffic — the §Perf iteration that
+                  removes the mask traffic entirely (EXPERIMENTS.md).
+    """
+    Nc, d = xc.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C, gate_vals, routes, lb_loss, z_loss = _route(p, xc, cfg)
+
+    if cfg.moe_dispatch == "scatter":
+        buf = jnp.zeros((E * C, d), xc.dtype)
+        for j, (e_j, pos_tok, keep) in enumerate(routes):
+            slot = jnp.where(keep, e_j * C + pos_tok, E * C)  # OOB -> dropped
+            buf = buf.at[slot].add(xc, mode="drop")
+        ye = _experts_ffn(p, buf.reshape(E, C, d), xc.dtype).reshape(E * C, d)
+        yc = jnp.zeros((Nc, d), xc.dtype)
+        for j, (e_j, pos_tok, keep) in enumerate(routes):
+            slot = jnp.clip(e_j * C + pos_tok, 0, E * C - 1)
+            g = (gate_vals[:, j] * keep).astype(xc.dtype)
+            yc = yc + ye[slot] * g[:, None]
+        return yc, lb_loss, z_loss
+
+    iota_c = jnp.arange(C, dtype=jnp.int32)
+    iota_e = jnp.arange(E, dtype=jnp.int32)
+    dispatch = jnp.zeros((Nc, E, C), jnp.bool_)
+    combine = jnp.zeros((Nc, E, C), jnp.float32)
+    for j, (e_j, pos_tok, keep) in enumerate(routes):
+        oh_e = e_j[:, None] == iota_e[None, :]
+        oh_c = (pos_tok[:, None] == iota_c[None, :]) & keep[:, None]
+        dm = oh_e[:, :, None] & oh_c[:, None, :]
+        dispatch = dispatch | dm
+        combine = combine + dm * gate_vals[:, j, None, None]
+
+    xe = jnp.einsum("nec,nd->ecd", dispatch.astype(xc.dtype), xc)
+    ye = _experts_ffn(p, xe, xc.dtype)
+    yc = jnp.einsum("nec,ecd->nd", combine.astype(xc.dtype), ye)
+    return yc, lb_loss, z_loss
+
+
+def _grouped_chunk_moe(p, xc, cfg):
+    """Grouped (GShard-style) chunk: (B, Sc, d) -> (B, Sc, d) + aux.
+
+    Routing, slot positions and capacity are PER BATCH ROW: the position
+    cumsum runs along the (unsharded) sequence axis, so with batch sharded
+    over (pod, data) the router never communicates — this removed the
+    ~9 TB/step of routing all-gathers measured on mixtral prefill_32k
+    (EXPERIMENTS.md §Perf).  Capacity C = ceil(Sc * k * cf / E) per row,
+    the classic GShard "group" semantics.
+    """
+    B, Sc, d = xc.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, -(-int(Sc * k * cfg.capacity_factor) // E))
+
+    logits = jnp.einsum("bsd,de->bse", xc, p["router"].astype(xc.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, k)            # (B, Sc, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    iota_e = jnp.arange(E, dtype=jnp.int32)
+    iota_c = jnp.arange(C, dtype=jnp.int32)
+    base = jnp.zeros((B, E), jnp.int32)
+    dispatch = jnp.zeros((B, Sc, E, C), jnp.bool_)
+    combine = jnp.zeros((B, Sc, E, C), jnp.float32)
+    for j in range(k):
+        e_j = expert_idx[..., j]                            # (B, Sc)
+        oh_e = e_j[..., None] == iota_e                     # (B, Sc, E)
+        pos = jnp.cumsum(oh_e.astype(jnp.int32), axis=1) - 1 + base[:, None]
+        pos_tok = jnp.sum(jnp.where(oh_e, pos, 0), axis=-1)  # (B, Sc)
+        base = base + jnp.sum(oh_e.astype(jnp.int32), axis=1)
+        keep = pos_tok < C
+        oh_c = (pos_tok[..., None] == iota_c) & keep[..., None]
+        dm = oh_e[..., None] & oh_c[:, :, None, :]
+        dispatch = dispatch | dm
+        combine = combine + dm * gate_vals[..., j, None, None]
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(xc.dtype), xc)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["w_gate"].astype(xc.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(xc.dtype))
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(xc.dtype))
+    yc = jnp.einsum("bsec,becd->bsd", combine.astype(xc.dtype), ye)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        (expert_idx[..., 0][..., None] == iota_e).astype(jnp.float32), axis=(0, 1))
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return yc, lb_loss, z_loss
+
+
+def moe_apply(p, x, cfg):
+    """x (B, S, d) -> (y (B, S, d), aux dict of scalar losses)."""
+    B, S, d = x.shape
+
+    if cfg.moe_group == "seq":
+        # grouped routing: chunk along sequence, batch stays sharded
+        Sc = max(1, min(cfg.moe_group_seq, S))
+        n_chunks = -(-S // Sc)
+        pad = n_chunks * Sc - S
+        xg = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+        xs = xg.reshape(B, n_chunks, Sc, d).swapaxes(0, 1)
+
+        def body(carry, xc):
+            lb, z = carry
+            yc, lb_c, z_c = _grouped_chunk_moe(p, xc, cfg)
+            return (lb + lb_c, z + z_c), yc
+
+        if cfg.moe_remat:
+            body = jax.checkpoint(body)
+        (lb, z), ys = lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs)
+        y = ys.swapaxes(0, 1).reshape(B, n_chunks * Sc, d)[:, :S]
+    else:
+        N = B * S
+        chunk = min(cfg.moe_chunk, N)
+        n_chunks = -(-N // chunk)
+        pad = n_chunks * chunk - N
+        xf = x.reshape(N, d)
+        if pad:
+            xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)])
+        xs = xf.reshape(n_chunks, chunk, d)
+
+        def body(carry, xc):
+            lb, z = carry
+            yc, lb_c, z_c = _chunk_moe(p, xc, cfg)
+            return (lb + lb_c, z + z_c), yc
+
+        if cfg.moe_remat:
+            # §Perf: the chunk scan otherwise SAVES every chunk's (Nc,E,C)
+            # dispatch/combine masks and (E,C,d) buffers for backward — the
+            # dominant HBM term on deepseek-v2 train_4k (EXPERIMENTS.md).
+            body = jax.checkpoint(body)
+        (lb, z), ys = lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs)
+        y = ys.reshape(n_chunks * chunk, d)[:N].reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, "silu")
+
+    aux = {"moe_lb_loss": lb / n_chunks, "moe_z_loss": z / n_chunks}
+    return y, aux

@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (one "rec" residual block):
+  x -> [gate branch: linear -> gelu] ⊙ [main: linear -> causal conv1d(width 4)
+       -> RG-LRU] -> linear out
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_r x_t + b_r)          recurrence gate
+  i_t = sigmoid(W_i x_t + b_i)          input gate
+  a_t = exp(-c * softplus(Λ) * r_t),  c = 8
+  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluate the linear recurrence with ``associative_scan``
+(log-depth over sequence); decode carries (h, conv window) state exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode_step"]
+
+_C = 8.0
+
+
+def rglru_init(key, cfg, dtype):
+    d, dr, cw = cfg.d_model, cfg.d_rnn, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    # Λ init so a ~ uniform in [0.9, 0.999] at r=0.5 (griffin recipe, simplified)
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, dr, dtype=jnp.float32)) * 2.0 / _C))
+    return {
+        "w_x": dense_init(ks[0], (d, dr), dtype),
+        "w_gate": dense_init(ks[1], (d, dr), dtype),
+        "conv_w": dense_init(ks[2], (cw, dr), dtype, scale=0.5),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_r": dense_init(ks[3], (dr, dr), dtype),
+        "b_r": jnp.zeros((dr,), dtype),
+        "w_i": dense_init(ks[4], (dr, dr), dtype),
+        "b_i": jnp.zeros((dr,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[5], (dr, d), dtype),
+    }
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(
+        jnp.einsum("...d,de->...e", u, p["w_r"].astype(u.dtype)).astype(jnp.float32)
+        + p["b_r"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("...d,de->...e", u, p["w_i"].astype(u.dtype)).astype(jnp.float32)
+        + p["b_i"].astype(jnp.float32)
+    )
+    a = jnp.exp(-_C * jax.nn.softplus(p["lam"]) * r)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+    return a, b
+
+
+def _conv(p, u, state=None):
+    """Causal depthwise conv along time. u (B,S,dr); state (B,cw-1,dr)|None."""
+    cw = p["conv_w"].shape[0]
+    pad = (
+        jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+        if state is None
+        else state.astype(u.dtype)
+    )
+    xp = jnp.concatenate([pad, u], axis=1)
+    out = sum(
+        xp[:, i : i + u.shape[1]] * p["conv_w"][i].astype(u.dtype)
+        for i in range(cw)
+    )
+    return out + p["conv_b"].astype(u.dtype), xp[:, -(cw - 1):]
+
+
+def rglru_apply(p, x, *, conv_state=None, h_state=None):
+    """Full-sequence block. x (B,S,d) -> (y (B,S,d), (h_last, conv_state))."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    u, conv_state = _conv(p, u, conv_state)
+
+    a, b = _gates(p, u)                       # (B,S,dr) fp32
+    if h_state is not None:                    # inject carried state as step 0
+        b = b.at[:, 0].add(a[:, 0] * h_state.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    y = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return y, (h[:, -1], conv_state)
+
+
+def rglru_decode_step(p, x, h_state, conv_state):
+    """One-token step. x (B,1,d); h (B,dr); conv (B,cw-1,dr)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    u, conv_state = _conv(p, u, conv_state)
+    a, b = _gates(p, u)                        # (B,1,dr)
+    h = a[:, 0] * h_state.astype(jnp.float32) + b[:, 0]
+    y = (h[:, None].astype(x.dtype) * gate)
+    y = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return y, h, conv_state

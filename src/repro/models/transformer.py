@@ -1,0 +1,409 @@
+"""Composable decoder/encoder stack covering all assigned families.
+
+The model is planned as *segments*: a homogeneous run of layers executed with
+``lax.scan`` over stacked params (compile time independent of depth — critical
+for 512-way SPMD lowering on this host), plus "plain" layers for structural
+exceptions (DeepSeek's dense layer 0, RecurrentGemma's trailing partial
+period).  Hybrid patterns scan over whole periods (e.g. (rec, rec, attn)).
+
+Modes: ``train``/``forward`` (full sequence, no cache), ``prefill`` (full
+sequence, emits per-layer caches), ``decode`` (one token, consumes caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv6
+from repro.models.layers import (
+    attention,
+    dense_init,
+    linear,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    rope_apply,
+    _head_rmsnorm,
+)
+from repro.models.mla import mla_attention, mla_decode_absorbed, mla_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rglru import rglru_apply, rglru_decode_step, rglru_init
+
+__all__ = ["plan_segments", "init_params", "apply_stack", "Segment", "init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str                 # "scan" | "plain"
+    specs: tuple[tuple[str, str], ...]   # per-layer (block, ffn) within a period
+    count: int                # scan length (periods) or 1 for plain
+
+
+def layer_specs(cfg: ModelConfig) -> list[tuple[str, str]]:
+    specs = []
+    for kind, ffn in zip(cfg.layer_kinds(), cfg.ffn_kinds()):
+        if cfg.family == "rwkv":
+            specs.append(("rwkv", "none"))
+        elif kind == "rec":
+            specs.append(("rec", "dense"))
+        else:
+            specs.append(("mla" if cfg.mla else "attn", ffn))
+    return specs
+
+
+def plan_segments(cfg: ModelConfig) -> list[Segment]:
+    specs = layer_specs(cfg)
+    segments: list[Segment] = []
+    start = cfg.first_dense_layers
+    for i in range(start):
+        segments.append(Segment("plain", (specs[i],), 1))
+    period = max(len(cfg.pattern), 1)
+    rest = specs[start:]
+    n_full = len(rest) // period
+    if n_full:
+        segments.append(Segment("scan", tuple(rest[:period]), n_full))
+    for s in rest[n_full * period:]:
+        segments.append(Segment("plain", (s,), 1))
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg, dtype):
+    d, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, Hq * Dh), dtype),
+        "wk": dense_init(ks[1], (d, Hkv * Dh), dtype),
+        "wv": dense_init(ks[2], (d, Hkv * Dh), dtype),
+        "wo": dense_init(ks[3], (Hq * Dh, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((Dh,), dtype)
+        p["k_norm"] = jnp.ones((Dh,), dtype)
+    return p
+
+
+def _block_init(key, cfg, spec):
+    block, ffn = spec
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": norm_init(d, cfg.norm, dtype)}
+    if block == "attn":
+        p["attn"] = _attn_init(ks[0], cfg, dtype)
+    elif block == "mla":
+        p["attn"] = mla_init(ks[0], cfg, dtype)
+    elif block == "rec":
+        p["rec"] = rglru_init(ks[0], cfg, dtype)
+    elif block == "rwkv":
+        p["rwkv"] = rwkv6.rwkv_init(ks[0], cfg, dtype)
+        p["ln2"] = norm_init(d, cfg.norm, dtype)
+        return p
+    if ffn != "none":
+        p["ln2"] = norm_init(d, cfg.norm, dtype)
+        if ffn == "moe":
+            p["ffn"] = moe_init(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = mlp_init(ks[1], d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# per-block cache init (zeros; decode dry-run lowers against these shapes)
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg, spec, B, T, dtype):
+    block, _ = spec
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    if block == "attn":
+        Tc = min(T, cfg.window) if cfg.window else T
+        return {
+            "k": jnp.zeros((B, Tc, Hkv, Dh), dtype),
+            "v": jnp.zeros((B, Tc, Hkv, Dh), dtype),
+        }
+    if block == "mla":
+        return {
+            "ckv": jnp.zeros((B, T, cfg.kv_lora), dtype),
+            "krope": jnp.zeros((B, T, cfg.qk_rope_dim), dtype),
+        }
+    if block == "rec":
+        return {
+            "h": jnp.zeros((B, cfg.d_rnn), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.d_rnn), dtype),
+        }
+    if block == "rwkv":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        K = cfg.rwkv_head_dim
+        return {
+            "state": jnp.zeros((B, H, K, K), jnp.float32),
+            "sa": jnp.zeros((B, cfg.d_model), dtype),
+            "sc": jnp.zeros((B, cfg.d_model), dtype),
+        }
+    raise ValueError(block)
+
+
+def init_cache(cfg: ModelConfig, B: int, T: int):
+    dtype = jnp.dtype(cfg.act_dtype)
+    caches = []
+    for seg in plan_segments(cfg):
+        period = {
+            f"sub{i}": _block_cache(cfg, spec, B, T, dtype)
+            for i, spec in enumerate(seg.specs)
+        }
+        if seg.kind == "scan":
+            period = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (seg.count,) + x.shape), period
+            )
+        caches.append(period)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+def _ring_kpos(pos, Wd):
+    s = jnp.arange(Wd, dtype=jnp.int32)
+    return pos - ((pos - s) % Wd)
+
+
+def _attn_qkv(p, x, positions, cfg):
+    B, S, _ = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"]).reshape(B, S, Hq, Dh)
+    k = linear(x, p["wk"]).reshape(B, S, Hkv, Dh)
+    v = linear(x, p["wv"]).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = _head_rmsnorm(q, p["q_norm"])
+        k = _head_rmsnorm(k, p["k_norm"])
+    q = rope_apply(q, positions, cfg.rope_theta)
+    k = rope_apply(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_block(p, x, cfg, positions, mode, cache, pos):
+    B, S, _ = x.shape
+    if mode != "decode":
+        q, k, v = _attn_qkv(p, x, positions, cfg)
+        out = attention(
+            q, k, v,
+            q_pos=positions, k_pos=positions,
+            causal=cfg.causal, window=cfg.window, q_chunk=cfg.attn_q_chunk,
+            chunk_remat=cfg.attn_chunk_remat,
+        )
+        y = linear(out.reshape(B, S, -1), p["wo"])
+        new_cache = None
+        if mode == "prefill":
+            if cfg.window and cfg.window < S:          # ring buffer: last Wd keys
+                Wd = cfg.window
+                sel = np.arange(S - Wd, S)
+                ring_k = jnp.zeros_like(cache["k"]).at[:, sel % Wd].set(k[:, sel])
+                ring_v = jnp.zeros_like(cache["v"]).at[:, sel % Wd].set(v[:, sel])
+                new_cache = {"k": ring_k, "v": ring_v}
+            else:
+                Tc = cache["k"].shape[1]
+                new_cache = {
+                    "k": lax.dynamic_update_slice(
+                        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                    "v": lax.dynamic_update_slice(
+                        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+                }
+        return y, new_cache
+
+    # ---- decode: one token at position ``pos`` ----------------------------
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _attn_qkv(p, x, positions, cfg)
+    Tc = cache["k"].shape[1]
+    if cfg.window and Tc == cfg.window:
+        slot = pos % Tc
+        k_pos = _ring_kpos(pos, Tc)
+    else:
+        slot = pos
+        k_pos = jnp.arange(Tc, dtype=jnp.int32)
+    ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                  (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                  (0, slot, 0, 0))
+    out = attention(
+        q, ck, cv,
+        q_pos=positions, k_pos=k_pos,
+        causal=True, window=None, q_chunk=cfg.attn_q_chunk,
+    )
+    y = linear(out.reshape(B, 1, -1), p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def _mla_block(p, x, cfg, positions, mode, cache, pos):
+    if mode != "decode":
+        y, (c_kv, k_rope) = mla_attention(p, x, positions, cfg)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {
+                "ckv": lax.dynamic_update_slice(
+                    cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, 0, 0)),
+                "krope": lax.dynamic_update_slice(
+                    cache["krope"], k_rope.astype(cache["krope"].dtype), (0, 0, 0)),
+            }
+        return y, new_cache
+    T = cache["ckv"].shape[1]
+    k_pos = jnp.arange(T, dtype=jnp.int32)
+    y, ckv, krope = mla_decode_absorbed(
+        p, x, pos, cache["ckv"], cache["krope"], k_pos, cfg
+    )
+    return y, {"ckv": ckv, "krope": krope}
+
+
+def _block_apply(p, x, spec, cfg, positions, mode, cache, pos):
+    """Returns (x, new_cache, (lb_loss, z_loss))."""
+    block, ffn = spec
+    aux = (jnp.float32(0), jnp.float32(0))
+    h = norm_apply(p["ln1"], x, cfg.norm)
+    if block == "attn":
+        y, new_cache = _attn_block(p["attn"], h, cfg, positions, mode, cache, pos)
+    elif block == "mla":
+        y, new_cache = _mla_block(p["attn"], h, cfg, positions, mode, cache, pos)
+    elif block == "rec":
+        if mode == "decode":
+            y, hst, conv = rglru_decode_step(
+                p["rec"], h, cache["h"], cache["conv"])
+            new_cache = {"h": hst, "conv": conv}
+        else:
+            y, (hst, conv) = rglru_apply(p["rec"], h)
+            new_cache = (
+                {"h": hst, "conv": conv.astype(cache["conv"].dtype)}
+                if mode == "prefill" else None
+            )
+    elif block == "rwkv":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        if mode == "decode":
+            y, sa, state = rwkv6.rwkv_time_mix_step(
+                p["rwkv"], h, H, cache["sa"], cache["state"])
+            new_cache = {"state": state, "sa": sa}
+        else:
+            y, (sa, state) = rwkv6.rwkv_time_mix(p["rwkv"], h, H)
+            new_cache = {"state": state, "sa": sa} if mode == "prefill" else None
+        x = x + y
+        h2 = norm_apply(p["ln2"], x, cfg.norm)
+        if mode == "decode":
+            y2, sc = rwkv6.rwkv_channel_mix_step(p["rwkv"], h2, cache["sc"])
+            new_cache["sc"] = sc
+        else:
+            y2, sc = rwkv6.rwkv_channel_mix(p["rwkv"], h2)
+            if mode == "prefill":
+                new_cache["sc"] = sc
+        if new_cache is None:
+            new_cache = jnp.float32(0)  # placeholder: uniform scan pytree
+        return x + y2, new_cache, aux
+    else:
+        raise ValueError(block)
+    x = x + y
+
+    if ffn != "none":
+        h = norm_apply(p["ln2"], x, cfg.norm)
+        if ffn == "moe":
+            y, moe_aux = moe_apply(p["ffn"], h, cfg)
+            aux = (moe_aux["moe_lb_loss"], moe_aux["moe_z_loss"])
+        else:
+            y = mlp_apply(p["ffn"], h, cfg.act)
+        x = x + y
+    if new_cache is None:   # placeholder keeps the scan pytree uniform
+        new_cache = jnp.float32(0)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stack apply
+# ---------------------------------------------------------------------------
+
+def make_constrainer(mesh):
+    """Sequence/tensor activation-sharding constraint for the residual stream.
+
+    Megatron-style sequence parallelism: between blocks the (B, S, d) residual
+    shards batch over (pod, data) and sequence over "model" — in particular
+    the per-layer remat checkpoints saved by the scan carry shrink by the
+    model-axis size (the 25 GB -> ~1.6 GB temp fix measured in EXPERIMENTS.md
+    §Perf).  XLA inserts the all-gather before attention and re-partitions
+    after, the standard SP collective pattern.
+    """
+    if mesh is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    msize = mesh.shape.get("model", 1)
+
+    def constrain(x):
+        if x.ndim != 3:
+            return x
+        B, S, _ = x.shape
+        spec: list = [None, None, None]
+        if B % dsize == 0 and B > 1:
+            spec[0] = daxes
+        elif S % dsize == 0 and S >= dsize:
+            spec[1] = daxes
+        if spec[1] is None and S % msize == 0 and S >= msize:
+            spec[1] = "model"
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    return constrain
+
+
+def _period_apply(p_period, x, seg, cfg, positions, mode, cache_period, pos,
+                  constrain=None):
+    new_cache = {}
+    lb = jnp.float32(0)
+    z = jnp.float32(0)
+    for i, spec in enumerate(seg.specs):
+        sub = f"sub{i}"
+        c = cache_period[sub] if cache_period is not None else None
+        if constrain is not None:
+            x = constrain(x)
+        x, nc, (lb_i, z_i) = _block_apply(
+            p_period[sub], x, spec, cfg, positions, mode, c, pos)
+        new_cache[sub] = nc
+        lb, z = lb + lb_i, z + z_i
+    if constrain is not None:
+        x = constrain(x)  # the scan carry (saved for backward) stays sharded
+    return x, new_cache, (lb, z)
+
+
+def apply_stack(params, x, cfg, positions, mode, caches=None, pos=None,
+                constrain=None):
+    """Run all segments. Returns (x, new_caches, aux)."""
+    lb = jnp.float32(0)
+    z = jnp.float32(0)
+    new_caches = []
+    use_cache = mode in ("prefill", "decode")
+    for si, seg in enumerate(plan_segments(cfg)):
+        p_seg = params["segments"][si]
+        c_seg = caches[si] if caches is not None else None
+        if seg.kind == "plain":
+            x, nc, (lb_i, z_i) = _period_apply(
+                p_seg, x, seg, cfg, positions, mode, c_seg, pos, constrain)
+            lb, z = lb + lb_i, z + z_i
+        else:
+            def body(carry, xs):
+                xc, lb_c, z_c = carry
+                p_i, c_i = xs if use_cache else (xs, None)
+                xc, nc_i, (lb_i, z_i) = _period_apply(
+                    p_i, xc, seg, cfg, positions, mode, c_i, pos, constrain)
+                return (xc, lb_c + lb_i, z_c + z_i), nc_i
+
+            if cfg.remat and mode == "train":
+                body = jax.checkpoint(body)
+            xs = (p_seg, c_seg) if use_cache else p_seg
+            (x, lb, z), nc = lax.scan(body, (x, lb, z), xs)
+        new_caches.append(nc if use_cache else None)
+    return x, (new_caches if use_cache else None), {"lb": lb, "z": z}

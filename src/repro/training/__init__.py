@@ -1,0 +1,11 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_step import TrainState, make_train_step, init_train_state
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+]

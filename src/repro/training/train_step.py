@@ -1,0 +1,45 @@
+"""Train state + jit-able train step (donated, sharding-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+# TrainState is a plain dict pytree: {"params", "opt": {"m","v"}, "step"}
+TrainState = dict
+
+
+def init_train_state(model, rng) -> TrainState:
+    params = model.init(rng)
+    return {"params": params, "opt": adamw_init(params), "step": jnp.int32(0)}
+
+
+def make_train_step(model, opt_cfg: AdamWConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Pure function of (state, batch): jit it with donate_argnums=(0,) and the
+    in/out shardings of your mesh (see launch/dryrun.py and launch/train.py).
+    """
+
+    def train_step(state: TrainState, batch):
+        def loss_fn(params):
+            return model.loss(params, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"]
+        )
+        new_params, new_opt, stats = adamw_update(
+            state["params"], grads, state["opt"], state["step"], opt_cfg
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        metrics = {**metrics, **stats, "loss": loss}
+        return new_state, metrics
+
+    return train_step

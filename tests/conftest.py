@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src-layout import path (tests also work without `pip install -e .`)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: deliberately no XLA_FLAGS here — smoke tests and benches must see the
+# single real device; only launch/dryrun.py (and subprocess tests) fake a fleet.

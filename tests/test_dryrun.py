@@ -1,0 +1,97 @@
+"""Dry-run machinery: HLO analyzer correctness, cell planning, roofline math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def test_analyzer_scan_trip_counts():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = lax.scan(body, x, None, length=10)
+        return out
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = jax.jit(f).lower(x, x).compile()
+    cost = analyze_hlo(c.as_text())
+    assert cost.flops == 2 * 128 ** 3 * 10
+    assert cost.unknown_trip_counts == 0
+
+
+def test_analyzer_nested_scan():
+    def g(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = lax.scan(inner, c, None, length=5)
+            return c, None
+        out, _ = lax.scan(outer, x, None, length=4)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = jax.jit(g).lower(x, x).compile()
+    assert analyze_hlo(c.as_text()).flops == 2 * 64 ** 3 * 20
+
+
+def test_analyzer_plain_dot_and_traffic():
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(x, w).compile()
+    cost = analyze_hlo(c.as_text())
+    assert cost.flops == 2 * 256 * 512 * 128
+    expect_traffic = (256 * 512 + 512 * 128 + 256 * 128) * 4
+    assert cost.traffic >= expect_traffic
+
+
+def test_plan_cells_counts():
+    from repro.launch.dryrun import SHAPES, plan_cells
+
+    cells = plan_cells()
+    assert len(cells) == 10 * len(SHAPES)          # 40 nominal cells
+    skips = [(a, s) for a, s, sk in cells if sk]
+    runs = [(a, s) for a, s, sk in cells if not sk]
+    # hubert: 2 decode skips; long_500k: 7 archs skip (incl hubert) = 8 unique
+    assert ("hubert-xlarge", "decode_32k") in skips
+    assert ("hubert-xlarge", "long_500k") in skips
+    assert ("mixtral-8x22b", "long_500k") in runs   # SWA is sub-quadratic
+    assert ("rwkv6-1.6b", "long_500k") in runs
+    assert ("recurrentgemma-2b", "long_500k") in runs
+    assert ("qwen3-32b", "long_500k") in skips
+    assert len(runs) == 32
+
+
+def test_collective_stats_parsing():
+    from repro.launch.dryrun import collective_stats
+
+    text = """
+  %ag = bf16[2048,5120]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%y), channel_id=2, replica_groups=[1,256]<=[256], to_apply=%add
+  %cp = f32[8,8]{1,0} collective-permute(%z), channel_id=3, source_target_pairs={{0,1}}
+"""
+    s = collective_stats(text)
+    ag = 2048 * 5120 * 2
+    assert s["all-gather"]["count"] == 1
+    assert abs(s["all-gather"]["moved_bytes"] - ag * 15 / 16) < 1
+    ar = 1024 * 4
+    assert abs(s["all-reduce"]["moved_bytes"] - ar * 2 * 255 / 256) < 1
+    assert s["collective-permute"]["moved_bytes"] == 256
+
+
+def test_roofline_terms():
+    from benchmarks.roofline import roofline_terms
+
+    rec = {
+        "analysis": {"flops": 197e12, "traffic_bytes": 819e9,
+                     "collective_bytes": 50e9},
+        "model_flops": 197e12 * 256 * 0.5,
+        "mesh": "single",
+    }
+    t = roofline_terms(rec)
+    assert abs(t["compute_s"] - 1.0) < 1e-6      # exactly 1s of MXU
+    assert abs(t["memory_s"] - 1.0) < 1e-6       # exactly 1s of HBM
+    assert abs(t["collective_s"] - 1.0) < 1e-6   # exactly 1s of ICI
+    assert t["bottleneck"] in ("compute", "memory", "collective")
+    assert abs(t["useful_flops_ratio"] - 0.5) < 1e-6

@@ -1,0 +1,113 @@
+"""Graph generator invariants (clean CSR contract) + suite stats."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import csr_from_edges
+from repro.core.csr import next_pow2
+from repro.graphs import (
+    SUITE,
+    build_graph,
+    erdos_renyi,
+    grid2d,
+    grid3d,
+    honeycomb,
+    power_law,
+    rmat,
+    road,
+    small_world,
+    stencil27,
+)
+from repro.graphs.rmat import RMAT_ER, RMAT_G
+
+GENS = {
+    "er": lambda: erdos_renyi(500, 6.0, seed=0),
+    "rmat_er": lambda: rmat(512, 8.0, RMAT_ER, seed=1),
+    "rmat_g": lambda: rmat(512, 8.0, RMAT_G, seed=2),
+    "grid2d": lambda: grid2d(10, 12),
+    "grid3d": lambda: grid3d(5, 6, 7),
+    "stencil27": lambda: stencil27(5, 5, 5),
+    "honeycomb": lambda: honeycomb(8, 10),
+    "road": lambda: road(300, seed=3),
+    "small_world": lambda: small_world(300, 6, seed=4),
+    "power_law": lambda: power_law(400, 5.0, seed=5),
+}
+
+
+@pytest.mark.parametrize("name", list(GENS))
+def test_clean_csr(name):
+    g = GENS[name]()
+    src, dst = g.edges()
+    assert (src != dst).all()                        # no self loops
+    # symmetric: every (u,v) has (v,u)
+    fwd = set(zip(src.tolist(), dst.tolist()))
+    assert all((v, u) in fwd for u, v in fwd)
+    # sorted, deduped adjacency
+    for v in range(min(g.n, 50)):
+        nb = g.neighbors(v)
+        assert (np.diff(nb) > 0).all() if nb.size > 1 else True
+
+
+def test_grid_degrees():
+    g = grid2d(10, 10)
+    assert g.max_degree == 4
+    g3 = grid3d(4, 4, 4)
+    assert g3.max_degree == 6
+    h = honeycomb(10, 12)
+    assert h.max_degree == 3
+
+
+def test_stencil27_degree():
+    g = stencil27(5, 5, 5)
+    assert g.max_degree == 26
+
+
+def test_rmat_skew():
+    er = rmat(2048, 8.0, RMAT_ER, seed=7)
+    gg = rmat(2048, 8.0, RMAT_G, seed=7)
+    assert gg.degree_std > er.degree_std * 1.5   # rmat-g is skewed (Table 1)
+
+
+def test_padded_adjacency():
+    g = erdos_renyi(100, 5.0, seed=9)
+    adj = g.padded_adjacency()
+    assert adj.shape == (100, g.max_degree)
+    for v in range(20):
+        nb = g.neighbors(v)
+        assert (adj[v, : nb.size] == nb).all()
+        assert (adj[v, nb.size:] == g.n).all()
+
+
+def test_degree_buckets_partition():
+    g = power_law(500, 6.0, seed=11)
+    buckets = g.degree_buckets([4, 16])
+    all_ids = np.sort(np.concatenate(buckets))
+    assert (all_ids == np.arange(g.n)).all()
+
+
+def test_suite_builds_small():
+    for name in ("rmat-er", "G3_circuit", "ASIC_320ks"):
+        g = build_graph(name, scale=0.05)
+        assert g.n > 100 and g.m > 100
+
+
+def test_suite_covers_table1():
+    assert len(SUITE) == 13   # every Table-1 graph has a stand-in
+
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (0, 1, 2, 3, 5, 1024, 1025)] == [
+        1, 1, 2, 4, 8, 1024, 2048]
+
+
+@given(st.integers(2, 200), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_csr_from_edges_random(n, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(0, 4 * n)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    g = csr_from_edges(n, src, dst)
+    s2, d2 = g.edges()
+    assert (s2 != d2).all()
+    assert g.row_offsets[-1] == g.m

@@ -1,0 +1,47 @@
+"""Chromatic scheduling: the paper's 'discover concurrency' application."""
+import numpy as np
+
+from repro.core import color_data_driven, greedy_serial
+from repro.core.scheduling import all_to_all_rounds, phases, schedule_quality
+from repro.graphs import erdos_renyi
+
+
+def test_phases_are_independent_sets():
+    g = erdos_renyi(800, 8.0, seed=1)
+    colors = color_data_driven(g).colors
+    adj = {v: set(g.neighbors(v).tolist()) for v in range(g.n)}
+    for phase in phases(colors):
+        s = set(phase.tolist())
+        for v in s:
+            assert not (adj[v] & s), "phase contains adjacent vertices"
+
+
+def test_phases_cover_all_vertices():
+    g = erdos_renyi(500, 6.0, seed=2)
+    colors = greedy_serial(g)
+    total = sum(p.size for p in phases(colors))
+    assert total == g.n
+
+
+def test_schedule_quality_parallelism():
+    g = erdos_renyi(1000, 6.0, seed=3)
+    sq = schedule_quality(color_data_driven(g).colors)
+    # fewer colors -> more parallelism; SGR should expose >= n/(maxdeg+1)
+    assert sq["mean_parallelism"] >= g.n / (g.max_degree + 1)
+
+
+def test_all_to_all_rounds_disjoint():
+    """Every round is a matching: no sender or receiver appears twice."""
+    P = 6
+    rounds = all_to_all_rounds(P)
+    seen = set()
+    for rnd in rounds:
+        senders = [s for s, _ in rnd]
+        receivers = [r for _, r in rnd]
+        assert len(senders) == len(set(senders))
+        assert len(receivers) == len(set(receivers))
+        seen.update(rnd)
+    # complete all-to-all covered exactly once
+    assert seen == {(i, j) for i in range(P) for j in range(P) if i != j}
+    # greedy edge coloring lands within 2x of the optimal P-1 rounds
+    assert len(rounds) <= 2 * (P - 1) + 1

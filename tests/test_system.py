@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests for the whole system."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_end_to_end_color_pipeline():
+    """Generate -> color (all algorithms) -> validate -> schedule, one flow."""
+    from repro.core import (color_data_driven, color_multihash, greedy_serial,
+                            is_valid_coloring, num_colors)
+    from repro.core.scheduling import phases
+    from repro.graphs import build_graph
+
+    g = build_graph("rmat-g", scale=0.05)
+    serial = greedy_serial(g)
+    opt = color_data_driven(g, coarsen_lanes=16384)
+    mis = color_multihash(g, 2)
+    assert is_valid_coloring(g, opt.colors)
+    # the paper's headline quality claim, end to end
+    assert num_colors(opt.colors) <= num_colors(serial) + 2
+    assert num_colors(mis.colors) > num_colors(opt.colors)
+    assert sum(p.size for p in phases(opt.colors)) == g.n
+
+
+def test_train_driver_cli(tmp_path):
+    """The launcher trains a reduced model for 20 steps from the CLI."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-4b",
+         "--reduced", "--steps", "20", "--batch", "4", "--seq", "32",
+         "--lr", "3e-3", "--ckpt-dir", str(tmp_path / "ck")],
+        capture_output=True, text=True, env=env, timeout=900, cwd=ROOT,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "loss=" in out.stdout
+    assert (tmp_path / "ck" / "step_20").exists()
+
+
+def test_quickstart_example():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", "quickstart.py")],
+        capture_output=True, text=True, env=env, timeout=900, cwd=ROOT,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "valid=True" in out.stdout
+
+
+def test_serve_driver():
+    from repro.configs import get_config
+    from repro.launch.serve import serve_batch
+
+    cfg = get_config("qwen3-4b").reduced()
+    out = serve_batch(cfg, batch=2, prompt_len=8, gen=6)
+    assert out["generated"].shape == (2, 6)
+
+
+def test_run_with_restarts(tmp_path):
+    from repro.configs import get_config
+    from repro.distributed.fault_tolerance import run_with_restarts
+    from repro.launch.train import train_loop
+
+    cfg = get_config("qwen3-4b").reduced()
+    ck = str(tmp_path / "ck")
+    calls = {"n": 0}
+
+    def run(start):
+        calls["n"] += 1
+        fail = 6 if calls["n"] == 1 else None   # first attempt dies at step 6
+        return train_loop(cfg, steps=10, batch_size=2, seq_len=16, lr=1e-3,
+                          ckpt_dir=ck, ckpt_every=3, log_every=5, seed=1,
+                          resume=start > 0, fail_at_step=fail)
+
+    out = run_with_restarts(run, ckpt_dir=ck, max_restarts=2)
+    assert calls["n"] == 2 and out["steps"] == 4   # resumed from step 6

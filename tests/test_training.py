@@ -1,0 +1,85 @@
+"""Optimizer math vs numpy oracle; loss-decreases; data-pipeline determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training import AdamWConfig, adamw_init, adamw_update
+from repro.training.data import SyntheticConfig, SyntheticData
+from repro.training.optimizer import cosine_lr
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(peak_lr=1e-2, warmup_steps=0, total_steps=100,
+                      weight_decay=0.1, clip_norm=1e9)
+    p = {"w": jnp.asarray(np.linspace(-1, 1, 6).reshape(2, 3), jnp.float32)}
+    g = {"w": jnp.asarray(np.full((2, 3), 0.5), jnp.float32)}
+    opt = adamw_init(p)
+    new_p, new_opt, stats = adamw_update(p, g, opt, jnp.int32(0), cfg)
+
+    # numpy oracle
+    lr = float(cosine_lr(jnp.int32(0), cfg))
+    m = 0.1 * 0.5
+    v = 0.05 * 0.25
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.95)
+    w = np.linspace(-1, 1, 6).reshape(2, 3)
+    want = w - lr * (mh / (np.sqrt(vh) + cfg.eps) + 0.1 * w)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+    np.testing.assert_allclose(float(stats["grad_norm"]),
+                               np.sqrt((0.5 ** 2) * 6), rtol=1e-5)
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(clip_norm=0.1, warmup_steps=0, total_steps=10)
+    p = {"w": jnp.ones((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 100.0)}
+    opt = adamw_init(p)
+    _, new_opt, stats = adamw_update(p, g, opt, jnp.int32(0), cfg)
+    # post-clip first moment: |g_clipped| = clip_norm/||g|| * g
+    scale = 0.1 / float(stats["grad_norm"])
+    np.testing.assert_allclose(
+        np.asarray(new_opt["m"]["w"]), 0.1 * 100.0 * scale, rtol=1e-4)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_lr(jnp.int32(s), cfg)) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert 0.1 < lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-6
+
+
+def test_loss_decreases_quick():
+    """30 steps on the synthetic affine-recurrence language -> loss drops."""
+    from repro.launch.train import train_loop
+
+    cfg = get_config("qwen3-4b").reduced()
+    out = train_loop(cfg, steps=30, batch_size=8, seq_len=32, lr=3e-3,
+                     log_every=5)
+    assert out["final_loss"] < out["first_loss"] - 0.3, out["losses"]
+
+
+def test_data_deterministic_and_stateless():
+    cfg = SyntheticConfig(vocab=100, seq_len=16, batch_size=4)
+    d1, d2 = SyntheticData(cfg), SyntheticData(cfg)
+    b5a = d1.batch(5)
+    _ = d1.batch(6)
+    b5b = d2.batch(5)   # fresh pipeline, same step -> identical batch
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    assert not np.array_equal(d1.batch(7)["tokens"], b5a["tokens"])
+
+
+def test_data_families():
+    enc = SyntheticData(SyntheticConfig(vocab=32, seq_len=8, batch_size=2,
+                                        family="encoder", d_frontend=16))
+    b = enc.batch(0)
+    assert b["frames"].shape == (2, 8, 16) and b["labels"].max() < 32
+    vlm = SyntheticData(SyntheticConfig(vocab=32, seq_len=8, batch_size=2,
+                                        family="vlm", d_frontend=16,
+                                        n_patches=4))
+    assert vlm.batch(0)["patches"].shape == (2, 4, 16)
