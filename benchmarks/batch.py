@@ -1,0 +1,49 @@
+"""Batched multi-graph throughput (beyond-paper; DESIGN.md §4).
+
+Measures the serving-path win of ``core/batch.py``: coloring B heterogeneous
+graphs with ONE jitted batched ``while_loop`` versus looping the B=1 fused
+driver.  Reported ``derived`` is graphs/sec; the batched call amortizes
+dispatch overhead across the batch exactly like Rokos/Bogle amortize it
+across subdomains, so its throughput should meet or beat the loop.
+
+Three rows per batch size:
+
+* ``loop_b1``        — B sequential ``color_data_driven(mode="fused")`` calls
+                       (each re-packs its graph, the naive serving loop)
+* ``batched``        — one ``color_batch_fused`` call on a pre-packed
+                       ``GraphBatch`` (packing amortized across requests, the
+                       steady-state serving path)
+* ``batched_e2e``    — batched including per-call packing (worst case)
+"""
+from __future__ import annotations
+
+from benchmarks.common import SCALE, row, timeit
+from repro.core import GraphBatch, color_batch_fused, color_data_driven
+from repro.core.validate import is_valid_coloring
+from repro.graphs import serving_mix
+
+
+def bench_batch_throughput():
+    """graphs/sec: one batched device program vs the B=1 fused loop."""
+    rows = []
+    for B in (8, 16):
+        graphs = serving_mix(B, SCALE)
+
+        t_loop, res_loop = timeit(
+            lambda: [color_data_driven(g, mode="fused") for g in graphs]
+        )
+        batch = GraphBatch.from_graphs(graphs)   # packed once, served many
+        t_bat, res_bat = timeit(lambda: color_batch_fused(batch))
+        t_e2e, _ = timeit(
+            lambda: color_batch_fused(GraphBatch.from_graphs(graphs))
+        )
+
+        for g, r_l, r_b in zip(graphs, res_loop, res_bat):
+            assert is_valid_coloring(g, r_b.colors)
+            assert (r_b.colors == r_l.colors).all()  # serving == loop, bitwise
+
+        rows.append(row(f"batch/B{B}/loop_b1", t_loop, round(B / t_loop, 1)))
+        rows.append(row(f"batch/B{B}/batched", t_bat, round(B / t_bat, 1)))
+        rows.append(row(f"batch/B{B}/batched_e2e", t_e2e, round(B / t_e2e, 1)))
+        rows.append(row(f"batch/B{B}/speedup", t_bat, round(t_loop / t_bat, 2)))
+    return rows

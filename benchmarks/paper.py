@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks.batch import bench_batch_throughput
 from benchmarks.common import SCALE, row, timeit
 from repro.core import (
     color_data_driven,
@@ -252,4 +253,5 @@ ALL_BENCHES = [
     bench_fig9_speedup,
     bench_fig10_scaling,
     bench_fig11_density,
+    bench_batch_throughput,
 ]

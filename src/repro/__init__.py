@@ -1,9 +1,28 @@
 """csrcolor-jax: speculative-greedy sparse graph coloring (Chen/Li/Yang 2016)
 as a first-class feature of a multi-pod JAX/TPU framework.
 
-Subpackages: core (the paper's coloring engine), graphs, kernels (Pallas),
-models / configs / training / distributed / launch (the LM substrate and
-multi-pod runtime).  See README.md and DESIGN.md.
+Public entry point: ``repro.color`` / ``repro.color_batch`` (lazy re-exports
+of ``repro.api``) — a registry-dispatched facade over every implementation.
+
+Subpackages: core (the paper's coloring engine + batched multi-graph
+engine), graphs, kernels (Pallas), models / configs / training /
+distributed / launch (the LM substrate and multi-pod runtime).  See
+README.md and DESIGN.md.
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+_API_NAMES = ("color", "color_batch", "algorithms", "get_algorithm", "register")
+
+
+def __getattr__(name):
+    # keep `import repro` light: the api (and jax) load on first use only
+    if name in _API_NAMES:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_API_NAMES))

@@ -1,0 +1,107 @@
+"""Unified public coloring API (DESIGN.md §4).
+
+One entry point for every coloring implementation in the repo:
+
+    from repro.api import color
+    result = color(g, algorithm="data_driven", heuristic="degree")
+
+Algorithms self-register: each ``core/`` module decorates a small adapter
+with ``@register(name)`` at import time, so adding an implementation never
+touches this file.  All adapters share the ``ColoringResult`` contract from
+``core/coloring.py`` (colors, iterations, work accounting, convergence).
+
+Registered names (see ``algorithms()``):
+
+* ``serial``      — sequential greedy oracle (Alg. 1)
+* ``data_driven`` — worklist speculative-greedy, the paper's contribution
+* ``fused``       — ``data_driven`` as ONE device program (``lax.while_loop``)
+* ``topology``    — work-inefficient all-lanes baseline (Alg. 6)
+* ``jp``          — Jones–Plassmann MIS (Alg. 3)
+* ``multihash``   — CUSPARSE-csrcolor multi-hash MIS
+* ``threestep``   — 3-step GM analogue (device rounds + serial host fix-up)
+
+``color_batch`` colors MANY graphs: for ``algorithm="fused"`` it dispatches
+to the batched multi-graph engine (``core/batch.py``) — one jitted call for
+the whole batch — and falls back to a per-graph loop otherwise.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Callable, Iterable
+
+if TYPE_CHECKING:  # imports stay lazy at runtime to avoid core<->api cycles
+    from repro.core.coloring import ColoringResult
+    from repro.core.csr import CSRGraph
+
+__all__ = ["register", "color", "color_batch", "algorithms", "get_algorithm"]
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str):
+    """Class-registry decorator: ``@register("jp")`` on a ``(g, **opts)`` adapter."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY and _REGISTRY[name] is not fn:
+            raise ValueError(f"algorithm {name!r} registered twice")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_registered() -> None:
+    # Importing the package runs every @register decorator in core/ modules.
+    import repro.core  # noqa: F401
+
+
+def algorithms() -> tuple[str, ...]:
+    """Sorted names of every registered coloring algorithm."""
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_algorithm(name: str) -> Callable:
+    """The registered adapter for ``name`` (raises ValueError if unknown)."""
+    _ensure_registered()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; registered: {', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+def color(graph: "CSRGraph", algorithm: str = "data_driven", **opts) -> "ColoringResult":
+    """Color ``graph`` with the named algorithm; extra ``opts`` pass through.
+
+    Returns a ``ColoringResult``; ``result.colors`` is an int32 array in
+    ``[1, num_colors]`` and ``result.num_colors`` the color count.
+    """
+    return get_algorithm(algorithm)(graph, **opts)
+
+
+def color_batch(
+    graphs: Iterable["CSRGraph"], algorithm: str = "fused", **opts
+) -> "list[ColoringResult]":
+    """Color many graphs; the serving-path entry point.
+
+    ``algorithm="fused"`` uses the batched engine: the graphs are packed into
+    one stacked padded-adjacency layout and a single jitted ``while_loop``
+    colors all of them concurrently (see ``core/batch.py``).  Any other name
+    loops ``color`` over the graphs.
+    """
+    graphs = list(graphs)
+    if algorithm == "fused":
+        from repro.core.batch import color_batch_fused
+
+        supported = {"heuristic", "firstfit", "use_kernel", "max_iters"}
+        extra = set(opts) - supported
+        if extra:
+            raise ValueError(
+                f"options {sorted(extra)} are not supported by the batched "
+                f"fused engine (supported: {sorted(supported)}); "
+                f"use color(g, 'fused', ...) per graph instead"
+            )
+        return color_batch_fused(graphs, **opts)
+    fn = get_algorithm(algorithm)
+    return [fn(g, **opts) for g in graphs]

@@ -1,0 +1,180 @@
+"""Batched multi-graph SGR engine — one device program colors B graphs.
+
+The serving-scale generalization of ``coloring.py``'s ``fused`` mode
+(DESIGN.md §4).  ``fused`` proved the whole coloring of ONE graph runs as a
+single jitted ``lax.while_loop``; here the same super-step is lifted over a
+leading batch axis with ``jax.vmap`` so a single dispatch colors a *batch*
+of heterogeneous graphs concurrently — amortizing launch overhead across
+requests the way Rokos/Bogle amortize it across subdomains.
+
+Layout (``GraphBatch``): B CSR graphs pack into one stacked padded-adjacency
+tensor ``(B, n_max, W)``.  Every graph shares the sentinel ``n_max`` (its
+per-graph sentinel ``n_i`` is remapped at pack time), so the ``colors_ext``
+trick from ``core/csr.py`` carries over per batch row: ``colors_ext`` is
+``(B, n_max + 1)`` with slot ``n_max`` pinned to color 0, making both the
+padding lanes inside a row and the all-sentinel padding *rows* of smaller
+graphs inert.  Worklists are ``(B, n_max)`` with sentinel fill; a finished
+graph's row compacts to all-sentinel and its lanes become no-ops.
+
+Determinism: with ``coarsen_ff == coarsen_cr == 1`` (the batched default)
+each graph's color evolution depends only on its own rows, so the batched
+result is bit-identical to running ``mode="fused"`` per graph — tested in
+``tests/test_batch.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.coloring import ColoringResult, sgr_step
+from repro.core.csr import CSRGraph
+
+__all__ = ["GraphBatch", "batched_sgr_step", "color_batch_fused"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """B CSR graphs packed into one stacked padded-adjacency layout."""
+
+    adj: jax.Array            # (B, n_max, W) int32; sentinel n_max in padding
+    deg_ext: jax.Array        # (B, n_max + 1) int32; sentinel slot holds 0
+    sizes: tuple[int, ...]    # per-graph vertex counts n_i
+    n_max: int
+
+    @property
+    def B(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def width(self) -> int:
+        return int(self.adj.shape[2])
+
+    @classmethod
+    def from_graphs(
+        cls, graphs: Sequence[CSRGraph], width: int | None = None
+    ) -> "GraphBatch":
+        """Pack ``graphs``; ``width`` may widen (never narrow) the adjacency."""
+        graphs = list(graphs)
+        sizes = tuple(g.n for g in graphs)
+        n_max = max(sizes, default=0)
+        need = max((g.max_degree for g in graphs), default=0)
+        W = max(need, width or 0, 1)
+        adj = np.full((len(graphs), n_max, W), n_max, dtype=np.int32)
+        deg = np.zeros((len(graphs), n_max + 1), dtype=np.int32)
+        for b, g in enumerate(graphs):
+            if g.n == 0:
+                continue
+            a = g.padded_adjacency(W)
+            adj[b, : g.n] = np.where(a == g.n, n_max, a)  # shared sentinel
+            deg[b, : g.n] = g.degrees
+        return cls(jnp.asarray(adj), jnp.asarray(deg), sizes, n_max)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("heuristic", "kind", "coarsen_ff", "coarsen_cr",
+                     "use_kernel"),
+)
+def batched_sgr_step(
+    adj,
+    deg_ext,
+    colors_ext,
+    wl,
+    *,
+    heuristic: str = "degree",
+    kind: str = "bitset",
+    coarsen_ff: int = 1,
+    coarsen_cr: int = 1,
+    use_kernel: bool = False,
+):
+    """``sgr_step`` over a leading batch axis: (B, …) in, (B, …) out."""
+    step = partial(
+        sgr_step,
+        heuristic=heuristic,
+        kind=kind,
+        coarsen_ff=coarsen_ff,
+        coarsen_cr=coarsen_cr,
+        use_kernel=use_kernel,
+    )
+    return jax.vmap(step)(adj, deg_ext, colors_ext, wl)
+
+
+@partial(jax.jit, static_argnames=("heuristic", "kind", "use_kernel"))
+def _run_batch(adj, deg_ext, sizes, max_iters, *, heuristic, kind, use_kernel):
+    B, n_max, _ = adj.shape
+    ids = jnp.arange(n_max, dtype=jnp.int32)
+    wl0 = jnp.where(ids[None, :] < sizes[:, None], ids[None, :], n_max)
+    colors0 = jnp.zeros((B, n_max + 1), dtype=jnp.int32)
+    zeros = jnp.zeros((B,), dtype=jnp.int32)
+
+    def cond(state):
+        _, _, counts, it, _, _ = state
+        return jnp.any(counts > 0) & (it < max_iters)
+
+    def body(state):
+        colors_ext, wl, counts, it, iters_b, work_b = state
+        live = counts > 0
+        colors_ext, wl, counts = batched_sgr_step(
+            adj, deg_ext, colors_ext, wl,
+            heuristic=heuristic, kind=kind, use_kernel=use_kernel,
+        )
+        return (colors_ext, wl, counts, it + 1,
+                iters_b + live.astype(jnp.int32), work_b + counts)
+
+    state = (colors0, wl0, sizes.astype(jnp.int32), jnp.int32(0), zeros, zeros)
+    return lax.while_loop(cond, body, state)
+
+
+def color_batch_fused(
+    graphs: "Iterable[CSRGraph] | GraphBatch",
+    *,
+    heuristic: str = "degree",
+    firstfit: str = "bitset",
+    use_kernel: bool = False,
+    max_iters: int | None = None,
+) -> list[ColoringResult]:
+    """Color B graphs in ONE jitted batched ``while_loop``; one result each.
+
+    The loop runs until the slowest graph converges; finished graphs idle as
+    all-sentinel no-op rows (their reported ``iterations`` counts only live
+    super-steps).  ``padded_work`` charges every graph the full ``n_max``
+    lanes per global step — the capacity cost of batching — while
+    ``work_items`` counts its genuinely live worklist entries.
+    """
+    batch = graphs if isinstance(graphs, GraphBatch) else GraphBatch.from_graphs(graphs)
+    algo = "batched_fused_sgr"
+    if batch.B == 0:
+        return []
+    if batch.n_max == 0:
+        return [ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True, algo)
+                for _ in range(batch.B)]
+    max_iters = max_iters or batch.n_max + 1
+    sizes = jnp.asarray(np.asarray(batch.sizes, dtype=np.int32))
+    colors_ext, _, counts, it, iters_b, work_b = _run_batch(
+        batch.adj, batch.deg_ext, sizes, jnp.int32(max_iters),
+        heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
+    )
+    colors = np.asarray(colors_ext[:, : batch.n_max])
+    counts = np.asarray(counts)
+    iters_b = np.asarray(iters_b)
+    work_b = np.asarray(work_b)
+    steps = int(it)
+    out = []
+    for b, n in enumerate(batch.sizes):
+        # first super-step processes all n vertices; work_b accumulates the
+        # live counts of every later step (mirrors _run_fused's accounting)
+        out.append(ColoringResult(
+            colors[b, :n].copy(),
+            int(iters_b[b]),
+            int(work_b[b]) + n if n else 0,
+            steps * batch.n_max,
+            converged=int(counts[b]) == 0,
+            algorithm=algo,
+        ))
+    return out

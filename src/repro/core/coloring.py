@@ -34,11 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.api import register
 from repro.core.csr import CSRGraph, next_pow2
 from repro.core.firstfit import FF_FUNCS
 from repro.core.heuristics import conflict_lose_flags
 
-__all__ = ["ColoringResult", "color_data_driven"]
+__all__ = ["ColoringResult", "color_data_driven", "color_fused"]
 
 
 @dataclasses.dataclass
@@ -192,6 +193,7 @@ def _prepare(g: CSRGraph, buckets):
     return adjs, deg_ext, classes
 
 
+@register("data_driven")
 def color_data_driven(
     g: CSRGraph,
     *,
@@ -265,6 +267,13 @@ def color_data_driven(
 
     colors = np.asarray(colors_ext[:n])
     return ColoringResult(colors, iters, work, padded, converged=sum(counts) == 0)
+
+
+@register("fused")
+def color_fused(g: CSRGraph, **opts) -> ColoringResult:
+    """``data_driven`` with the whole coloring as one device program."""
+    opts.pop("mode", None)
+    return color_data_driven(g, mode="fused", **opts)
 
 
 def _run_fused(

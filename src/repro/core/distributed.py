@@ -37,7 +37,12 @@ __all__ = ["color_distributed"]
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if hasattr(jax, "shard_map"):  # jax >= 0.4.35 top-level export
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 def _build_step(mesh, n_pad: int, n_loc: int, heuristic: str):

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import register
 from repro.core.coloring import ColoringResult
 from repro.core.csr import CSRGraph
 
@@ -105,11 +106,13 @@ def _run_mis(g: CSRGraph, nhash: int, modes: tuple, algorithm: str) -> ColoringR
     )
 
 
+@register("jp")
 def color_jp(g: CSRGraph) -> ColoringResult:
     """Alg. 3 verbatim: one independent set (local maxima), one color/round."""
     return _run_mis(g, nhash=1, modes=("max",), algorithm="jp_mis")
 
 
+@register("multihash")
 def color_multihash(g: CSRGraph, nhash: int = 2) -> ColoringResult:
     """csrcolor analogue: 2*nhash independent sets (colors) per round."""
     return _run_mis(

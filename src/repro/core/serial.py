@@ -9,9 +9,10 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api import register
 from repro.core.csr import CSRGraph
 
-__all__ = ["greedy_serial"]
+__all__ = ["greedy_serial", "color_serial"]
 
 
 def greedy_serial(g: CSRGraph, order: str | np.ndarray = "natural") -> np.ndarray:
@@ -39,3 +40,19 @@ def greedy_serial(g: CSRGraph, order: str | np.ndarray = "natural") -> np.ndarra
         free = np.nonzero(color_mask[1:limit] != v)[0]
         colors[v] = free[0] + 1
     return colors[:n]
+
+
+@register("serial")
+def color_serial(g: CSRGraph, *, order: str | np.ndarray = "natural"):
+    """``greedy_serial`` under the shared ``ColoringResult`` contract."""
+    from repro.core.coloring import ColoringResult
+
+    colors = greedy_serial(g, order)
+    return ColoringResult(
+        colors,
+        iterations=1,           # one sequential sweep
+        work_items=g.n,
+        padded_work=g.n,
+        converged=True,
+        algorithm="serial_greedy",
+    )

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api import register
 from repro.core.coloring import ColoringResult
 from repro.core.csr import CSRGraph
 from repro.core.topo import _topo_step
@@ -36,6 +37,7 @@ def _serial_fixup(g: CSRGraph, colors: np.ndarray) -> np.ndarray:
     return colors[: g.n]
 
 
+@register("threestep")
 def color_threestep(
     g: CSRGraph,
     *,

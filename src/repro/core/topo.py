@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import register
 from repro.core.coloring import ColoringResult, cr_flags
 from repro.core.csr import CSRGraph
 from repro.core.firstfit import FF_FUNCS
@@ -38,6 +39,7 @@ def _topo_step(adj, deg_ext, colors_ext, colored, *, heuristic, kind):
     return colors_ext, colored, jnp.sum(~colored)
 
 
+@register("topology")
 def color_topology(
     g: CSRGraph,
     *,

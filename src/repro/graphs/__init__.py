@@ -9,7 +9,7 @@ from repro.graphs.generators import (
     small_world,
     stencil27,
 )
-from repro.graphs.suite import SUITE, build_graph, build_suite
+from repro.graphs.suite import SUITE, build_graph, build_suite, serving_mix
 
 __all__ = [
     "rmat",
@@ -24,4 +24,5 @@ __all__ = [
     "SUITE",
     "build_graph",
     "build_suite",
+    "serving_mix",
 ]

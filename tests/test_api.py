@@ -1,0 +1,93 @@
+"""Unified API registry: dispatch, contract, and error behaviour."""
+import pytest
+
+import repro
+from repro import api
+from repro.core import ColoringResult, color_data_driven, is_valid_coloring
+from repro.graphs import erdos_renyi, grid2d, power_law
+
+FIXTURES = {
+    "er": lambda: erdos_renyi(300, 6.0, seed=0),
+    "grid": lambda: grid2d(12, 15),
+    "powerlaw": lambda: power_law(300, 5.0, seed=1),
+}
+
+EXPECTED = {"serial", "data_driven", "fused", "topology", "jp", "multihash",
+            "threestep"}
+
+
+def test_registry_contents():
+    assert EXPECTED <= set(api.algorithms())
+
+
+@pytest.mark.parametrize("gname", list(FIXTURES))
+@pytest.mark.parametrize("algorithm", sorted(EXPECTED))
+def test_every_algorithm_proper(gname, algorithm):
+    g = FIXTURES[gname]()
+    r = api.color(g, algorithm=algorithm)
+    assert isinstance(r, ColoringResult)
+    assert is_valid_coloring(g, r.colors), (gname, algorithm)
+    assert r.converged
+    assert r.num_colors >= 1
+
+
+def test_unknown_algorithm_raises():
+    g = FIXTURES["er"]()
+    with pytest.raises(ValueError, match="unknown algorithm 'nope'"):
+        api.color(g, algorithm="nope")
+    with pytest.raises(ValueError, match="data_driven"):  # names are listed
+        api.color(g, algorithm="nope")
+
+
+def test_opts_pass_through():
+    g = FIXTURES["er"]()
+    base = api.color(g, "data_driven", heuristic="id", firstfit="scan")
+    assert is_valid_coloring(g, base.colors)
+    ref = color_data_driven(g, heuristic="id", firstfit="scan")
+    assert (base.colors == ref.colors).all()
+
+
+def test_fused_equals_mode_fused():
+    g = FIXTURES["powerlaw"]()
+    via_api = api.color(g, "fused")
+    direct = color_data_driven(g, mode="fused")
+    assert (via_api.colors == direct.colors).all()
+    assert via_api.iterations == direct.iterations
+
+
+def test_serial_result_contract():
+    g = FIXTURES["grid"]()
+    r = api.color(g, "serial")
+    assert isinstance(r, ColoringResult)
+    assert r.algorithm == "serial_greedy"
+    assert r.num_colors <= g.max_degree + 1
+
+
+def test_top_level_reexports():
+    g = FIXTURES["er"]()
+    assert set(repro.algorithms()) == set(api.algorithms())
+    r = repro.color(g, "serial")
+    assert is_valid_coloring(g, r.colors)
+
+
+def test_color_batch_loop_fallback():
+    graphs = [FIXTURES["er"](), FIXTURES["grid"]()]
+    results = repro.color_batch(graphs, algorithm="serial")
+    assert len(results) == 2
+    for g, r in zip(graphs, results):
+        assert is_valid_coloring(g, r.colors)
+
+
+def test_color_batch_rejects_unsupported_fused_opts():
+    graphs = [FIXTURES["er"]()]
+    with pytest.raises(ValueError, match="coarsen_ff"):
+        repro.color_batch(graphs, algorithm="fused", coarsen_ff=2)
+    # supported opts still pass through
+    results = repro.color_batch(graphs, algorithm="fused", heuristic="id",
+                                firstfit="scan")
+    assert is_valid_coloring(graphs[0], results[0].colors)
+
+
+def test_register_rejects_duplicates():
+    with pytest.raises(ValueError, match="registered twice"):
+        api.register("serial")(lambda g: None)

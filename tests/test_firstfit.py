@@ -1,8 +1,11 @@
-"""FirstFit variants + conflict heuristics: unit + hypothesis property tests."""
+"""FirstFit variants + conflict heuristics: deterministic unit tests.
+
+The hypothesis property tests (randomized oracle sweeps) live in
+``test_properties.py`` behind ``pytest.importorskip("hypothesis")`` so this
+module's coverage survives environments without hypothesis installed.
+"""
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.firstfit import (
     FF_FUNCS,
@@ -23,20 +26,16 @@ def _oracle_row(row):
     return c
 
 
-@given(
-    st.integers(1, 30),                   # rows
-    st.integers(1, 40),                   # width
-    st.integers(0, 2**31 - 1),            # seed
-)
-@settings(max_examples=40, deadline=None)
-def test_firstfit_variants_match_oracle(w, W, seed):
-    rng = np.random.default_rng(seed)
-    nc = rng.integers(0, W + 3, size=(w, W)).astype(np.int32)
-    want = np.array([_oracle_row(r) for r in nc], dtype=np.int32)
-    for name, fn in FF_FUNCS.items():
-        got = np.asarray(fn(jnp.asarray(nc)))
-        np.testing.assert_array_equal(got, want, err_msg=name)
-    np.testing.assert_array_equal(np.asarray(firstfit_ref(jnp.asarray(nc))), want)
+def test_firstfit_variants_match_oracle_fixed_seeds():
+    for w, W, seed in [(7, 5, 0), (30, 40, 1), (1, 1, 2), (16, 33, 3)]:
+        rng = np.random.default_rng(seed)
+        nc = rng.integers(0, W + 3, size=(w, W)).astype(np.int32)
+        want = np.array([_oracle_row(r) for r in nc], dtype=np.int32)
+        for name, fn in FF_FUNCS.items():
+            got = np.asarray(fn(jnp.asarray(nc)))
+            np.testing.assert_array_equal(got, want, err_msg=name)
+        np.testing.assert_array_equal(
+            np.asarray(firstfit_ref(jnp.asarray(nc))), want)
 
 
 def test_firstfit_greedy_bound_edge():
@@ -63,11 +62,9 @@ def test_ffs_u32():
     np.testing.assert_array_equal(got, np.array(want))
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=30, deadline=None)
-def test_conflict_exactly_one_loser(seed):
+def test_conflict_exactly_one_loser_fixed_seed():
     """For every monochromatic edge, exactly one endpoint loses (both rules)."""
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(1234)
     n = 10
     deg = rng.integers(0, 7, size=n + 1).astype(np.int32)
     deg[n] = 0

@@ -1,9 +1,11 @@
-"""Graph generator invariants (clean CSR contract) + suite stats."""
+"""Graph generator invariants (clean CSR contract) + suite stats.
+
+Randomized csr_from_edges property tests live in ``test_properties.py``
+behind ``pytest.importorskip("hypothesis")``.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import csr_from_edges
 from repro.core.csr import next_pow2
 from repro.graphs import (
     SUITE,
@@ -98,16 +100,3 @@ def test_suite_covers_table1():
 def test_next_pow2():
     assert [next_pow2(x) for x in (0, 1, 2, 3, 5, 1024, 1025)] == [
         1, 1, 2, 4, 8, 1024, 2048]
-
-
-@given(st.integers(2, 200), st.integers(0, 10**6))
-@settings(max_examples=25, deadline=None)
-def test_csr_from_edges_random(n, seed):
-    rng = np.random.default_rng(seed)
-    m = rng.integers(0, 4 * n)
-    src = rng.integers(0, n, size=m)
-    dst = rng.integers(0, n, size=m)
-    g = csr_from_edges(n, src, dst)
-    s2, d2 = g.edges()
-    assert (s2 != d2).all()
-    assert g.row_offsets[-1] == g.m

@@ -1,0 +1,80 @@
+"""Hypothesis property tests (randomized sweeps against host oracles).
+
+Collected only when hypothesis is installed (see requirements-dev.txt);
+``pytest.importorskip`` skips the whole module cleanly otherwise, keeping
+tier-1 collection green on minimal environments.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import csr_from_edges  # noqa: E402
+from repro.core.firstfit import FF_FUNCS  # noqa: E402
+from repro.core.heuristics import conflict_lose_flags  # noqa: E402
+from repro.kernels.firstfit.ref import firstfit_ref  # noqa: E402
+
+
+def _oracle_row(row):
+    present = set(int(c) for c in row if c > 0)
+    c = 1
+    while c in present:
+        c += 1
+    return c
+
+
+@given(
+    st.integers(1, 30),                   # rows
+    st.integers(1, 40),                   # width
+    st.integers(0, 2**31 - 1),            # seed
+)
+@settings(max_examples=40, deadline=None)
+def test_firstfit_variants_match_oracle(w, W, seed):
+    rng = np.random.default_rng(seed)
+    nc = rng.integers(0, W + 3, size=(w, W)).astype(np.int32)
+    want = np.array([_oracle_row(r) for r in nc], dtype=np.int32)
+    for name, fn in FF_FUNCS.items():
+        got = np.asarray(fn(jnp.asarray(nc)))
+        np.testing.assert_array_equal(got, want, err_msg=name)
+    np.testing.assert_array_equal(np.asarray(firstfit_ref(jnp.asarray(nc))), want)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_conflict_exactly_one_loser(seed):
+    """For every monochromatic edge, exactly one endpoint loses (both rules)."""
+    rng = np.random.default_rng(seed)
+    n = 10
+    deg = rng.integers(0, 7, size=n + 1).astype(np.int32)
+    deg[n] = 0
+    colors = rng.integers(0, 3, size=n + 1).astype(np.int32)
+    colors[n] = 0
+    for heuristic in ("id", "degree"):
+        for u in range(n):
+            for v in range(n):
+                if u == v or colors[u] == 0 or colors[u] != colors[v]:
+                    continue
+                lu = conflict_lose_flags(
+                    jnp.asarray([u]), jnp.asarray([[v]]),
+                    jnp.asarray([colors[u]]), jnp.asarray([[colors[v]]]),
+                    jnp.asarray([deg[u]]), jnp.asarray([[deg[v]]]), heuristic)
+                lv = conflict_lose_flags(
+                    jnp.asarray([v]), jnp.asarray([[u]]),
+                    jnp.asarray([colors[v]]), jnp.asarray([[colors[u]]]),
+                    jnp.asarray([deg[v]]), jnp.asarray([[deg[u]]]), heuristic)
+                assert bool(lu[0]) != bool(lv[0]), (heuristic, u, v)
+
+
+@given(st.integers(2, 200), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_csr_from_edges_random(n, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(0, 4 * n)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    g = csr_from_edges(n, src, dst)
+    s2, d2 = g.edges()
+    assert (s2 != d2).all()
+    assert g.row_offsets[-1] == g.m
