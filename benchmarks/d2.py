@@ -1,0 +1,91 @@
+"""Distance-2 & bipartite benchmarks: colors + throughput vs the serial D2
+oracle (DESIGN.md §11), the Jacobian-compression workload.
+
+Rows follow the ``name,us_per_call,derived`` convention of ``run.py``;
+``python -m benchmarks.d2`` runs just this file.  Quality numbers (colors)
+are hardware-independent; runtimes are host wall-clock, so — as everywhere
+in this suite — the oracle/engine *ratios* are the meaningful quantity.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # so `python benchmarks/d2.py` finds `benchmarks.*`
+
+from benchmarks.common import SCALE, row, timeit
+from repro.d2 import (
+    color_bipartite,
+    color_distance2,
+    compress_jacobian_pattern,
+    greedy_serial_bipartite,
+    greedy_serial_d2,
+    validate_bipartite,
+    validate_d2,
+)
+from repro.graphs import build_graph, jacobian_band, jacobian_tall_skinny
+
+# squares are much denser than the originals, so the D2 matrix runs a
+# representative subset at a reduced scale
+D2_GRAPHS = ("rmat-er", "G3_circuit", "europe.osm", "thermal2", "cage15")
+D2_SCALE = SCALE * 0.25
+
+
+def bench_d2_quality_speed():
+    """Colors + speedup of the D2 engine vs the serial D2 oracle."""
+    rows = []
+    for name in D2_GRAPHS:
+        g = build_graph(name, D2_SCALE)
+        ts, oracle = timeit(lambda: greedy_serial_d2(g))
+        te, r = timeit(lambda: color_distance2(g, mode="fused"))
+        assert validate_d2(g, r.colors), name
+        rows.append(row(f"d2/{name}/colors_serial", ts, int(oracle.max())))
+        rows.append(row(f"d2/{name}/colors_sgr", te, r.num_colors))
+        rows.append(row(f"d2/{name}/speedup", te, round(ts / te, 4)))
+        rows.append(row(f"d2/{name}/iterations", te, r.iterations))
+    return rows
+
+
+def bench_d2_bipartite():
+    """Jacobian compression: banded (known optimum) + tall-skinny patterns."""
+    rows = []
+    for band in (1, 3):
+        bg = jacobian_band(int(20000 * D2_SCALE) or 64, band=band)
+        ts, oracle = timeit(lambda: greedy_serial_bipartite(bg))
+        te, r = timeit(lambda: color_bipartite(bg, mode="fused"))
+        assert validate_bipartite(bg, r.colors)
+        opt = 2 * band + 1
+        rows.append(row(f"d2/banded_b{band}/colors_optimal", 0.0, opt))
+        rows.append(row(f"d2/banded_b{band}/colors_serial", ts, int(oracle.max())))
+        rows.append(row(f"d2/banded_b{band}/colors_sgr", te, r.num_colors))
+    # n_cols² >> n_rows·nnz² keeps the conflict graph unsaturated, so the
+    # compression ratio (not just validity) is exercised
+    n_rows = int(60000 * D2_SCALE) or 256
+    for n_cols, nnz in ((512, 3), (128, 2)):
+        bg = jacobian_tall_skinny(n_rows, n_cols, nnz_per_row=nnz, seed=0)
+        ts, oracle = timeit(lambda: greedy_serial_bipartite(bg))
+        te, cr = timeit(lambda: compress_jacobian_pattern(bg, mode="fused"))
+        assert validate_bipartite(bg, cr.coloring.colors)
+        rows.append(row(
+            f"d2/tallskinny_{n_rows}x{n_cols}/groups_serial", ts, int(oracle.max())
+        ))
+        rows.append(row(
+            f"d2/tallskinny_{n_rows}x{n_cols}/groups_sgr", te, cr.num_groups
+        ))
+        rows.append(row(
+            f"d2/tallskinny_{n_rows}x{n_cols}/compression", te,
+            round(n_cols / cr.num_groups, 2),
+        ))
+    return rows
+
+
+D2_BENCHES = [bench_d2_quality_speed, bench_d2_bipartite]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived", flush=True)
+    for bench in D2_BENCHES:
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,33 +1,102 @@
-"""Run every paper benchmark. Prints ``name,us_per_call,derived`` CSV.
+"""Run every paper benchmark. Prints ``name,us_per_call,derived`` CSV and
+writes ``BENCH_coloring.json`` — the machine-readable perf trajectory.
 
 Scale via REPRO_BENCH_SCALE (default 0.15); see benchmarks/common.py.
 The roofline table (§Roofline) is separate: ``python -m benchmarks.roofline``
 consumes the dry-run JSON produced by ``repro.launch.dryrun``.
+
+``BENCH_coloring.json`` records per-algorithm colors + wall-clock on a small
+fixed suite (REPRO_BENCH_JSON_SCALE, default 0.02) so CI and future PRs can
+diff quality/perf without parsing the CSV.  ``--json-only`` skips the CSV
+matrix.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # so `python benchmarks/run.py` finds `benchmarks.*`
+
+JSON_PATH = os.environ.get("REPRO_BENCH_JSON", "BENCH_coloring.json")
+JSON_SCALE = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
+JSON_GRAPHS = ("rmat-er", "rmat-g", "G3_circuit", "europe.osm", "thermal2")
+
+
+def bench_coloring_json(path: str = JSON_PATH) -> dict:
+    """Per-algorithm colors + wall-clock on the small suite, as JSON."""
+    from benchmarks.common import timeit
+    from repro import api
+    from repro.core import is_valid_coloring
+    from repro.d2 import compress_jacobian_pattern, validate_bipartite
+    from repro.graphs import build_graph, jacobian_band
+
+    graphs = {name: build_graph(name, JSON_SCALE) for name in JSON_GRAPHS}
+    doc = {
+        "schema": 1,
+        "scale": JSON_SCALE,
+        "graphs": {
+            name: {"n": g.n, "m": g.m, "max_degree": g.max_degree}
+            for name, g in graphs.items()
+        },
+        "algorithms": {},
+        "bipartite": {},
+    }
+    for alg in api.algorithms():
+        if alg == "bipartite":  # needs a BipartiteGraph; measured below
+            continue
+        per_graph = {}
+        for name, g in graphs.items():
+            try:
+                seconds, r = timeit(lambda: api.color(g, algorithm=alg))
+            except Exception as e:  # keep the harness going
+                per_graph[name] = {"error": f"{type(e).__name__}: {e}"}
+                continue
+            per_graph[name] = {
+                "colors": r.num_colors,
+                "seconds": round(seconds, 6),
+                "iterations": r.iterations,
+                "valid": bool(is_valid_coloring(g, r.colors)),
+            }
+        doc["algorithms"][alg] = per_graph
+    band = 2
+    bg = jacobian_band(int(20000 * JSON_SCALE) or 64, band=band)
+    seconds, cr = timeit(lambda: compress_jacobian_pattern(bg, mode="fused"))
+    doc["bipartite"][f"banded_b{band}"] = {
+        "groups": cr.num_groups,
+        "optimal": 2 * band + 1,
+        "seconds": round(seconds, 6),
+        "valid": bool(validate_bipartite(bg, cr.coloring.colors)),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc
 
 
 def main() -> None:
-    from benchmarks.paper import ALL_BENCHES
+    json_only = "--json-only" in sys.argv
+    if not json_only:
+        from benchmarks.d2 import D2_BENCHES
+        from benchmarks.paper import ALL_BENCHES
 
-    print("name,us_per_call,derived", flush=True)
-    for bench in ALL_BENCHES:
-        t0 = time.time()
-        try:
-            rows = bench()
-        except Exception as e:  # keep the harness going; report the failure
-            print(f"{bench.__name__},0,ERROR:{type(e).__name__}:{e}")
-            continue
-        for name, us, derived in rows:
-            print(f"{name},{us:.1f},{derived}", flush=True)
-        print(f"# {bench.__name__} done in {time.time() - t0:.1f}s",
-              file=sys.stderr)
+        print("name,us_per_call,derived", flush=True)
+        for bench in list(ALL_BENCHES) + list(D2_BENCHES):
+            t0 = time.time()
+            try:
+                rows = bench()
+            except Exception as e:  # keep the harness going; report the failure
+                print(f"{bench.__name__},0,ERROR:{type(e).__name__}:{e}")
+                continue
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived}", flush=True)
+            print(f"# {bench.__name__} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+    bench_coloring_json()
+    print(f"# wrote {JSON_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -19,10 +19,14 @@ Registered names (see ``algorithms()``):
 * ``jp``          — Jones–Plassmann MIS (Alg. 3)
 * ``multihash``   — CUSPARSE-csrcolor multi-hash MIS
 * ``threestep``   — 3-step GM analogue (device rounds + serial host fix-up)
+* ``distance2``   — distance-2 SGR (``repro.d2``; same super-step on G²)
+* ``bipartite``   — bipartite partial coloring of a ``BipartiteGraph``
+                    column side (the Jacobian-compression workload)
 
-``color_batch`` colors MANY graphs: for ``algorithm="fused"`` it dispatches
-to the batched multi-graph engine (``core/batch.py``) — one jitted call for
-the whole batch — and falls back to a per-graph loop otherwise.
+``color_batch`` colors MANY graphs: for ``algorithm="fused"`` (distance-1)
+and ``algorithm="distance2"`` it dispatches to the batched multi-graph
+engine (``core/batch.py``) — one jitted call for the whole batch — and
+falls back to a per-graph loop otherwise.
 """
 from __future__ import annotations
 
@@ -50,8 +54,9 @@ def register(name: str):
 
 
 def _ensure_registered() -> None:
-    # Importing the package runs every @register decorator in core/ modules.
+    # Importing the packages runs every @register decorator in their modules.
     import repro.core  # noqa: F401
+    import repro.d2  # noqa: F401
 
 
 def algorithms() -> tuple[str, ...]:
@@ -91,7 +96,7 @@ def color_batch(
     loops ``color`` over the graphs.
     """
     graphs = list(graphs)
-    if algorithm == "fused":
+    if algorithm in ("fused", "distance2"):
         from repro.core.batch import color_batch_fused
 
         supported = {"heuristic", "firstfit", "use_kernel", "max_iters"}
@@ -100,8 +105,10 @@ def color_batch(
             raise ValueError(
                 f"options {sorted(extra)} are not supported by the batched "
                 f"fused engine (supported: {sorted(supported)}); "
-                f"use color(g, 'fused', ...) per graph instead"
+                f"use color(g, {algorithm!r}, ...) per graph instead"
             )
-        return color_batch_fused(graphs, **opts)
+        return color_batch_fused(
+            graphs, distance2=(algorithm == "distance2"), **opts
+        )
     fn = get_algorithm(algorithm)
     return [fn(g, **opts) for g in graphs]

@@ -46,6 +46,7 @@ class GraphBatch:
     deg_ext: jax.Array        # (B, n_max + 1) int32; sentinel slot holds 0
     sizes: tuple[int, ...]    # per-graph vertex counts n_i
     n_max: int
+    distance2: bool = False   # True when adj holds the SQUARE adjacencies
 
     @property
     def B(self) -> int:
@@ -57,23 +58,34 @@ class GraphBatch:
 
     @classmethod
     def from_graphs(
-        cls, graphs: Sequence[CSRGraph], width: int | None = None
+        cls,
+        graphs: Sequence[CSRGraph],
+        width: int | None = None,
+        distance2: bool = False,
     ) -> "GraphBatch":
-        """Pack ``graphs``; ``width`` may widen (never narrow) the adjacency."""
+        """Pack ``graphs``; ``width`` may widen (never narrow) the adjacency.
+
+        ``distance2=True`` packs each graph's SQUARE adjacency (G², two-hop
+        neighborhoods) while keeping the ORIGINAL degrees for the conflict
+        loser rule — the same convention as ``repro.d2.color_distance2``'s
+        precomputed strategy, so batched D2 stays bit-identical to per-graph
+        fused D2 runs (DESIGN.md §11).
+        """
         graphs = list(graphs)
         sizes = tuple(g.n for g in graphs)
         n_max = max(sizes, default=0)
-        need = max((g.max_degree for g in graphs), default=0)
+        adj_graphs = [g.square() for g in graphs] if distance2 else graphs
+        need = max((g.max_degree for g in adj_graphs), default=0)
         W = max(need, width or 0, 1)
         adj = np.full((len(graphs), n_max, W), n_max, dtype=np.int32)
         deg = np.zeros((len(graphs), n_max + 1), dtype=np.int32)
-        for b, g in enumerate(graphs):
+        for b, (g, ag) in enumerate(zip(graphs, adj_graphs)):
             if g.n == 0:
                 continue
-            a = g.padded_adjacency(W)
+            a = ag.padded_adjacency(W)
             adj[b, : g.n] = np.where(a == g.n, n_max, a)  # shared sentinel
             deg[b, : g.n] = g.degrees
-        return cls(jnp.asarray(adj), jnp.asarray(deg), sizes, n_max)
+        return cls(jnp.asarray(adj), jnp.asarray(deg), sizes, n_max, distance2)
 
 
 @partial(
@@ -138,6 +150,7 @@ def color_batch_fused(
     firstfit: str = "bitset",
     use_kernel: bool = False,
     max_iters: int | None = None,
+    distance2: bool = False,
 ) -> list[ColoringResult]:
     """Color B graphs in ONE jitted batched ``while_loop``; one result each.
 
@@ -146,9 +159,23 @@ def color_batch_fused(
     super-steps).  ``padded_work`` charges every graph the full ``n_max``
     lanes per global step — the capacity cost of batching — while
     ``work_items`` counts its genuinely live worklist entries.
+
+    ``distance2=True`` is the batched D2 path: the packed adjacency is each
+    graph's square (see ``GraphBatch.from_graphs``), everything downstream
+    is unchanged, and results are bit-identical to per-graph
+    ``color_distance2(mode="fused", strategy="precomputed")`` runs.
     """
-    batch = graphs if isinstance(graphs, GraphBatch) else GraphBatch.from_graphs(graphs)
-    algo = "batched_fused_sgr"
+    if isinstance(graphs, GraphBatch):
+        if graphs.distance2 != distance2:
+            raise ValueError(
+                f"GraphBatch was packed with distance2={graphs.distance2} but "
+                f"color_batch_fused was called with distance2={distance2}; "
+                f"re-pack with GraphBatch.from_graphs(graphs, distance2=...)"
+            )
+        batch = graphs
+    else:
+        batch = GraphBatch.from_graphs(graphs, distance2=distance2)
+    algo = "batched_fused_sgr_d2" if distance2 else "batched_fused_sgr"
     if batch.B == 0:
         return []
     if batch.n_max == 0:

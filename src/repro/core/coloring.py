@@ -39,7 +39,14 @@ from repro.core.csr import CSRGraph, next_pow2
 from repro.core.firstfit import FF_FUNCS
 from repro.core.heuristics import conflict_lose_flags
 
-__all__ = ["ColoringResult", "color_data_driven", "color_fused"]
+__all__ = [
+    "ColoringResult",
+    "color_data_driven",
+    "color_fused",
+    "fused_result",
+    "run_fused_loop",
+    "run_workefficient_loop",
+]
 
 
 @dataclasses.dataclass
@@ -60,11 +67,18 @@ class ColoringResult:
 # phase helpers (shared with topo.py / threestep.py / distributed.py)
 # --------------------------------------------------------------------------
 
-def gather_rows(adj: jax.Array, ids: jax.Array) -> jax.Array:
-    """Gather padded adjacency rows; sentinel ids yield all-sentinel rows."""
+def gather_rows(adj: jax.Array, ids: jax.Array, sentinel: int | None = None) -> jax.Array:
+    """Gather padded adjacency rows; sentinel ids yield all-sentinel rows.
+
+    ``sentinel`` is the fill value for masked rows and defaults to the row
+    count (square adjacency).  Rectangular compositions — the bipartite
+    cols→rows hop, whose *output* ids live on the other side (repro.d2) —
+    pass the target side's sentinel explicitly.
+    """
     n = adj.shape[0]
+    fill = n if sentinel is None else sentinel
     rows = adj[jnp.clip(ids, 0, n - 1)]
-    return jnp.where((ids < n)[:, None], rows, n)
+    return jnp.where((ids < n)[:, None], rows, fill)
 
 
 def ff_apply(adj, colors_ext, ids, kind: str, use_kernel: bool = False,
@@ -169,6 +183,73 @@ def sgr_step(
 # --------------------------------------------------------------------------
 # drivers
 # --------------------------------------------------------------------------
+# The two driver loops are generic over the super-step: ``step(colors_ext,
+# wl) -> (colors_ext, wl, count)``.  ``color_data_driven`` instantiates them
+# with ``sgr_step``; the distance-2 engine (repro.d2) reuses them with its
+# two-hop super-step instead of copying the scaffolding.
+
+def run_fused_loop(step, colors_ext, wl0, count0, max_iters: int):
+    """The whole coloring as ONE jitted ``lax.while_loop`` device program.
+
+    Returns ``(colors_ext, wl, count, iters, work)`` where ``work`` is the
+    sum of post-step live counts (the first full-capacity step is charged by
+    the caller, matching the paper's work accounting).
+    """
+
+    @partial(jax.jit, static_argnames=())
+    def run(colors_ext, wl, count):
+        def cond(state):
+            _, _, count, it, _ = state
+            return (count > 0) & (it < max_iters)
+
+        def body(state):
+            colors_ext, wl, count, it, work = state
+            colors_ext, wl, count = step(colors_ext, wl)
+            return colors_ext, wl, count, it + 1, work + count
+
+        state = (colors_ext, wl, count, jnp.int32(0), jnp.int32(0))
+        return lax.while_loop(cond, body, state)
+
+    return run(colors_ext, wl0, jnp.int32(count0))
+
+
+def fused_result(colors_ext, n: int, count, it, work,
+                 algorithm: str = "data_driven_sgr") -> ColoringResult:
+    """Shared result assembly for fused drivers (paper work accounting).
+
+    Every super-step dispatches full capacity, so ``padded_work`` is
+    ``iters * n`` and the first step's n live items are charged on top of
+    the post-step counts accumulated in ``work``.
+    """
+    iters = int(it)
+    return ColoringResult(
+        np.asarray(colors_ext[:n]),
+        iters,
+        int(work) + n,
+        iters * n,
+        converged=int(count) == 0,
+        algorithm=algorithm,
+    )
+
+
+def run_workefficient_loop(step, colors_ext, wl0, count0: int, max_iters: int):
+    """Host loop re-slicing the worklist to the next pow2 of the live count.
+
+    Single-class variant of the paper's work-efficiency argument (the
+    bucketed multi-class loop lives in ``color_data_driven``).  Returns
+    ``(colors_ext, iters, work, padded, converged)``.
+    """
+    wl, count = wl0, int(count0)
+    iters = work = padded = 0
+    while count > 0 and iters < max_iters:
+        cap = min(next_pow2(count), wl.shape[0])
+        colors_ext, wl, cnt = step(colors_ext, wl[:cap])
+        work += count
+        padded += cap
+        count = int(cnt)
+        iters += 1
+    return colors_ext, iters, work, padded, count == 0
+
 
 def _prepare(g: CSRGraph, buckets):
     """Device arrays + per-bucket (ids, sliced adjacency) covering each class."""
@@ -281,38 +362,18 @@ def _run_fused(
     use_kernel, max_iters,
 ):
     n = g.n
-
-    @partial(jax.jit, static_argnames=())
-    def run(adj, deg_ext, colors_ext):
-        def cond(state):
-            _, _, count, it, _ = state
-            return (count > 0) & (it < max_iters)
-
-        def body(state):
-            colors_ext, wl, count, it, work = state
-            colors_ext, wl, count = sgr_step(
-                adj,
-                deg_ext,
-                colors_ext,
-                wl,
-                heuristic=heuristic,
-                kind=kind,
-                coarsen_ff=coarsen_ff,
-                coarsen_cr=coarsen_cr,
-                use_kernel=use_kernel,
-            )
-            return colors_ext, wl, count, it + 1, work + count
-
-        wl0 = jnp.arange(n, dtype=jnp.int32)
-        state = (colors_ext, wl0, jnp.int32(n), jnp.int32(0), jnp.int32(0))
-        return lax.while_loop(cond, body, state)
-
-    colors_ext, _, count, it, work = run(adj, deg_ext, colors_ext)
-    iters = int(it)
-    return ColoringResult(
-        np.asarray(colors_ext[:n]),
-        iters,
-        int(work) + n,  # every super-step processes full capacity; first is n
-        iters * n,
-        converged=int(count) == 0,
+    step = partial(
+        sgr_step,
+        adj,
+        deg_ext,
+        heuristic=heuristic,
+        kind=kind,
+        coarsen_ff=coarsen_ff,
+        coarsen_cr=coarsen_cr,
+        use_kernel=use_kernel,
     )
+    wl0 = jnp.arange(n, dtype=jnp.int32)
+    colors_ext, _, count, it, work = run_fused_loop(
+        step, colors_ext, wl0, n, max_iters
+    )
+    return fused_result(colors_ext, n, count, it, work)

@@ -12,6 +12,9 @@ derived views:
   lanes.
 * ``degree_buckets`` — vertex classes by degree, the data-layout analogue of
   Merrill's thread/warp/CTA load-balancing hierarchy (§3.3 of the paper).
+* ``square`` / ``compose_pairs`` / ``two_hop_degree_bound`` — the host-side
+  distance-2 machinery (DESIGN.md §11): G² reduces distance-2 coloring to
+  distance-1 coloring, so the SGR engine applies unchanged.
 """
 from __future__ import annotations
 
@@ -24,6 +27,8 @@ __all__ = [
     "CSRGraph",
     "DeviceGraph",
     "csr_from_edges",
+    "compose_pairs",
+    "padded_ragged",
     "next_pow2",
 ]
 
@@ -76,20 +81,62 @@ class CSRGraph:
         return self.col_indices[self.row_offsets[v] : self.row_offsets[v + 1]]
 
     # -- dense views ---------------------------------------------------------
-    def padded_adjacency(self, width: int | None = None) -> np.ndarray:
-        """Dense ``(n, width)`` adjacency; padding slots hold the sentinel ``n``."""
+    def padded_adjacency(
+        self, width: int | None = None, *, allow_truncate: bool = False
+    ) -> np.ndarray:
+        """Dense ``(n, width)`` adjacency; padding slots hold the sentinel ``n``.
+
+        ``width < max_degree`` would silently drop neighbors and corrupt any
+        coloring built on the view, so it raises unless the caller opts in
+        with ``allow_truncate=True`` (degree-bucket callers size the width
+        from the bucket bound, so legitimate paths never truncate).
+        """
         n = self.n
         width = max(self.max_degree, 1) if width is None else int(width)
-        adj = np.full((n, width), n, dtype=np.int32)
+        if width < self.max_degree and not allow_truncate:
+            raise ValueError(
+                f"width={width} < max_degree={self.max_degree} would silently "
+                f"drop neighbors; pass allow_truncate=True if that is intended"
+            )
+        return padded_ragged(self.row_offsets, self.col_indices, width, n)
+
+    # -- distance-2 views (DESIGN.md §11) ------------------------------------
+    def two_hop_degree_bound(self) -> int:
+        """Cheap upper bound on the square graph's max degree (no dedup).
+
+        ``max_v [deg(v) + Σ_{u∈N(v)} deg(u)]`` — computable in O(m) without
+        materializing two-hop pairs, so drivers can decide precomputed vs
+        on-the-fly strategy *before* paying the O(Σ deg²) build cost.
+        """
         if self.m == 0:
-            return adj
-        deg = self.degrees
-        # fully vectorized ragged fill: position of each CSR entry within its row
-        rows = np.repeat(np.arange(n, dtype=np.int64), deg)
-        within = np.arange(self.m, dtype=np.int64) - self.row_offsets[rows]
-        keep = within < width
-        adj[rows[keep], within[keep]] = self.col_indices[keep]
-        return adj
+            return 0
+        deg = self.degrees.astype(np.int64)
+        rows = np.repeat(np.arange(self.n, dtype=np.int64), deg)
+        nbr_deg_sum = np.bincount(
+            rows, weights=deg[self.col_indices], minlength=self.n
+        ).astype(np.int64)
+        return int((deg + nbr_deg_sum).max())
+
+    def square(self) -> "CSRGraph":
+        """The square graph G²: u ~ v iff 0 < dist(u, v) <= 2.
+
+        Distance-2 coloring of G is distance-1 coloring of G², so the whole
+        SGR engine (super-step, batching, kernels) applies unchanged.  Costs
+        O(Σ_u deg(u)²) host time/memory; callers on huge/skewed graphs should
+        consult ``two_hop_degree_bound`` first and fall back to on-the-fly
+        two-hop composition (``repro.d2``) when this would blow the budget.
+        """
+        src1, dst1 = self.edges()
+        src2, dst2 = compose_pairs(
+            self.row_offsets, self.col_indices, self.row_offsets, self.col_indices
+        )
+        return csr_from_edges(
+            self.n,
+            np.concatenate([src1, src2]),
+            np.concatenate([dst1, dst2]),
+            symmetrize=False,  # dist<=2 is already a symmetric relation
+            dedup=True,
+        )
 
     def degree_buckets(self, thresholds: Sequence[int]) -> list[np.ndarray]:
         """Vertex-id arrays per degree class: (0, t0], (t0, t1], ..., (tk-1, inf)."""
@@ -141,6 +188,63 @@ def csr_from_edges(
     np.add.at(row_offsets, src + 1, 1)
     row_offsets = np.cumsum(row_offsets)
     return CSRGraph(row_offsets.astype(np.int64), dst.astype(np.int32))
+
+
+def padded_ragged(
+    row_offsets: np.ndarray,
+    col_indices: np.ndarray,
+    width: int,
+    sentinel: int,
+) -> np.ndarray:
+    """Dense ``(n_rows, width)`` fill of a ragged CSR; pads hold ``sentinel``.
+
+    The sentinel is explicit (not the row count) because rectangular
+    adjacencies — the bipartite cols→rows / rows→cols halves of ``repro.d2``
+    — pad with the *target* side's vertex count.
+    """
+    n_rows = row_offsets.shape[0] - 1
+    m = col_indices.shape[0]
+    out = np.full((n_rows, width), sentinel, dtype=np.int32)
+    if m == 0:
+        return out
+    deg = np.diff(row_offsets)
+    # fully vectorized ragged fill: position of each CSR entry within its row
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), deg)
+    within = np.arange(m, dtype=np.int64) - row_offsets[rows]
+    keep = within < width
+    out[rows[keep], within[keep]] = col_indices[keep]
+    return out
+
+
+def compose_pairs(
+    row_offsets_a: np.ndarray,
+    col_indices_a: np.ndarray,
+    row_offsets_b: np.ndarray,
+    col_indices_b: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """All length-2 paths ``v -A-> u -B-> w`` as raw ``(v, w)`` pairs.
+
+    The host-side two-hop primitive behind both the square graph
+    (``A = B = G``) and the bipartite column-conflict relation
+    (``A = cols→rows``, ``B = rows→cols``).  Pairs are NOT deduplicated and
+    include ``v == w`` round trips; callers clean up via ``csr_from_edges``.
+    Fully vectorized: O(#paths) = O(Σ_u deg_A·deg_B) time and memory.
+    """
+    n_a = row_offsets_a.shape[0] - 1
+    deg_a = np.diff(row_offsets_a).astype(np.int64)
+    deg_b = np.diff(row_offsets_b).astype(np.int64)
+    src_a = np.repeat(np.arange(n_a, dtype=np.int64), deg_a)  # v per A-edge
+    mid = col_indices_a.astype(np.int64)                      # u per A-edge
+    lens = deg_b[mid]                                         # fan-out per A-edge
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    v = np.repeat(src_a, lens)
+    starts = np.repeat(row_offsets_b[:-1].astype(np.int64)[mid], lens)
+    ends = np.cumsum(lens)
+    within = np.arange(total, dtype=np.int64) - np.repeat(ends - lens, lens)
+    w = col_indices_b[starts + within].astype(np.int64)
+    return v, w
 
 
 class DeviceGraph:

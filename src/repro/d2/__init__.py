@@ -1,0 +1,39 @@
+"""Distance-2 & bipartite partial coloring engine (DESIGN.md §11).
+
+The paper's speculate → detect-conflicts → recolor super-step is not
+specific to distance-1 coloring: this subpackage runs the same SGR machinery
+on two-hop neighborhoods, covering the variants that dominate real demand
+for coloring — sparse Jacobian/Hessian compression in AD and optimization
+(Taş & Kaya, arXiv:1701.02628; Besta et al., arXiv:2008.11321).
+
+* ``color_distance2``    — distance-2 coloring of a ``CSRGraph`` (registered
+                           as ``"distance2"`` in ``repro.api``)
+* ``color_bipartite``    — partial coloring of one side of a
+                           ``BipartiteGraph`` (registered as ``"bipartite"``)
+* ``compress_jacobian_pattern`` — the Jacobian-compression entry point:
+                           structurally-orthogonal column groups + seed matrix
+* ``greedy_serial_d2`` / ``greedy_serial_bipartite`` — quality oracles
+* ``validate_d2`` / ``validate_bipartite`` — exact host-side validity checks
+"""
+from repro.d2.bipartite import (
+    BipartiteGraph,
+    CompressionResult,
+    color_bipartite,
+    compress_jacobian_pattern,
+)
+from repro.d2.coloring import color_distance2, d2_sgr_step
+from repro.d2.serial import greedy_serial_bipartite, greedy_serial_d2
+from repro.d2.validate import validate_bipartite, validate_d2
+
+__all__ = [
+    "BipartiteGraph",
+    "CompressionResult",
+    "color_bipartite",
+    "color_distance2",
+    "compress_jacobian_pattern",
+    "d2_sgr_step",
+    "greedy_serial_bipartite",
+    "greedy_serial_d2",
+    "validate_bipartite",
+    "validate_d2",
+]

@@ -1,0 +1,228 @@
+"""Distance-2 speculative-greedy coloring on the SGR super-step (DESIGN.md §11).
+
+A distance-2 coloring gives distinct colors to any two vertices within
+distance ≤ 2 — equivalently, a distance-1 coloring of the square graph G².
+That equivalence is the backbone of this module; two execution strategies
+share one quality contract:
+
+* ``precomputed`` — build G² host-side (``CSRGraph.square``) and run the
+  UNCHANGED distance-1 super-step (``core.coloring.sgr_step``) over its
+  padded adjacency.  One gather per phase, exactly the §2 layout; this is
+  also what the batched engine packs (``core/batch.py``), so batched D2 is
+  bit-identical to per-graph fused D2 for free.
+* ``onthefly`` — when the ``(n, W2)`` square view would blow the memory
+  budget, compose TWO sentinel-padded gathers through ``colors_ext`` per
+  super-step instead (``d2_sgr_step``): sentinel ids yield all-sentinel
+  rows in hop 1, which yield all-sentinel rows again in hop 2, so padding
+  stays inert through both hops — the D2 analogue of the §2 trick.  The
+  ``coarsen`` knob chunks the worklist to bound the ``(w, W + W²)``
+  transient, mirroring D1 thread coarsening.
+
+Both strategies order conflict losers by the ORIGINAL graph's degree (ties
+by id) — not G²'s — so with ``coarsen=1`` they produce bit-identical
+colorings (tested), and the choice is purely a memory/performance policy.
+
+Self-visits need no masking: a vertex reaches itself through any two-hop
+round trip ``v → u → v``, but at FirstFit time a worklist vertex's own
+color is always 0 (uncolored/cleared), and both conflict loser rules are
+strict total orders, so the self lane is inert in both phases.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import register
+from repro.core.coloring import (
+    ColoringResult,
+    _chunk_bounds,
+    compact,
+    cr_flags,
+    ff_apply,
+    fused_result,
+    gather_rows,
+    run_fused_loop,
+    run_workefficient_loop,
+    sgr_step,
+)
+from repro.core.csr import CSRGraph
+
+__all__ = ["color_distance2", "d2_sgr_step", "DEFAULT_D2_BUDGET"]
+
+# bytes the precomputed strategy may spend on the (n, W2) square view plus
+# the transient two-hop pair expansion; past this, auto falls back to
+# on-the-fly composition (the W2 capping policy of DESIGN.md §11)
+DEFAULT_D2_BUDGET = 256 * 2**20
+
+
+# --------------------------------------------------------------------------
+# the two-hop super-step (shared with bipartite.py)
+# --------------------------------------------------------------------------
+
+@partial(
+    jax.jit,
+    static_argnames=("heuristic", "kind", "use_kernel", "include_first_hop",
+                     "coarsen"),
+)
+def d2_sgr_step(
+    adj_a,
+    adj_b,
+    deg_ext,
+    colors_ext,
+    wl,
+    *,
+    heuristic: str = "degree",
+    kind: str = "bitset",
+    use_kernel: bool = False,
+    include_first_hop: bool = True,
+    coarsen: int = 1,
+):
+    """One D2 super-step: FirstFit → ConflictResolve(+clear) → compaction.
+
+    The forbidden/conflict neighborhood of worklist vertex ``v`` is composed
+    per step from two gathers: ``rows1 = adj_a[v]`` then ``rows2 =
+    adj_b[rows1]``.  For distance-2 on one graph, ``adj_a is adj_b`` and
+    hop-1 neighbors are part of the neighborhood (``include_first_hop``);
+    for bipartite partial coloring, ``adj_a`` is cols→rows, ``adj_b`` is
+    rows→cols, and only hop-2 (column-side) ids carry colors.  All phase
+    helpers are the distance-1 ones from ``core.coloring`` — only the row
+    provider changed.
+    """
+    n = colors_ext.shape[0] - 1  # colored-side vertex count (sentinel slot)
+    cap = wl.shape[0]
+
+    def rows_for(ids):
+        rows1 = gather_rows(adj_a, ids, sentinel=adj_b.shape[0])
+        rows2 = gather_rows(adj_b, rows1.reshape(-1), sentinel=n)
+        rows2 = rows2.reshape(ids.shape[0], -1)
+        if include_first_hop:
+            return jnp.concatenate([rows1, rows2], axis=1), rows1, rows2
+        return rows2, rows1, rows2
+
+    # the gathered rows are color-independent, so with an unchunked worklist
+    # the (dominant) two-hop gather is shared by both phases; chunked runs
+    # recompute per chunk to keep the transient bounded — that is the point
+    # of coarsening
+    shared = rows_for(wl) if coarsen == 1 else None
+
+    # ---- FirstFit phase (coarsened: later chunks see earlier chunk colors) --
+    for lo, hi in _chunk_bounds(cap, coarsen):
+        ids = wl[lo:hi]
+        rows, rows1, rows2 = shared if shared is not None else rows_for(ids)
+        if use_kernel and include_first_hop:
+            from repro.kernels.d2.ops import d2_firstfit_bitset_tpu
+
+            c = d2_firstfit_bitset_tpu(colors_ext[rows1], colors_ext[rows2])
+            c = jnp.where(ids < n, c, 0).astype(colors_ext.dtype)
+            colors_ext = colors_ext.at[ids].set(c)
+        else:
+            colors_ext = ff_apply(adj_a, colors_ext, ids, kind, use_kernel,
+                                  rows=rows)
+
+    # ---- ConflictResolve + color clearing --------------------------------
+    lose_parts = []
+    for lo, hi in _chunk_bounds(cap, coarsen):
+        ids = wl[lo:hi]
+        rows, _, _ = shared if shared is not None else rows_for(ids)
+        lose = cr_flags(adj_a, deg_ext, colors_ext, ids, heuristic, use_kernel,
+                        rows=rows)
+        colors_ext = colors_ext.at[ids].set(
+            jnp.where(lose, 0, colors_ext[ids])
+        )
+        lose_parts.append(lose)
+    lose = jnp.concatenate(lose_parts) if len(lose_parts) > 1 else lose_parts[0]
+
+    # ---- worklist compaction ---------------------------------------------
+    new_wl, new_count = compact(wl, lose, sentinel=n)
+    return colors_ext, new_wl, new_count
+
+
+# --------------------------------------------------------------------------
+# drivers (shared with bipartite.py)
+# --------------------------------------------------------------------------
+
+def drive(step, n: int, mode: str, max_iters: int, algorithm: str) -> ColoringResult:
+    """Run ``step`` to convergence under the requested execution mode.
+
+    Reuses the generic loops refactored out of ``core.coloring``; the work
+    accounting mirrors the distance-1 drivers exactly.
+    """
+    colors_ext = jnp.zeros((n + 1,), dtype=jnp.int32)
+    wl0 = jnp.arange(n, dtype=jnp.int32)
+    if mode == "fused":
+        colors_ext, _, count, it, work = run_fused_loop(
+            step, colors_ext, wl0, n, max_iters
+        )
+        return fused_result(colors_ext, n, count, it, work, algorithm)
+    if mode != "workefficient":
+        raise ValueError(f"unknown mode {mode!r}")
+    colors_ext, iters, work, padded, converged = run_workefficient_loop(
+        step, colors_ext, wl0, n, max_iters
+    )
+    return ColoringResult(
+        np.asarray(colors_ext[:n]), iters, work, padded, converged,
+        algorithm=algorithm,
+    )
+
+
+def resolve_strategy(strategy: str, est_bytes: int, budget: int) -> str:
+    if strategy == "auto":
+        return "precomputed" if est_bytes <= budget else "onthefly"
+    if strategy not in ("precomputed", "onthefly"):
+        raise ValueError(
+            f"unknown strategy {strategy!r}; options: auto, precomputed, onthefly"
+        )
+    return strategy
+
+
+@register("distance2")
+def color_distance2(
+    g: CSRGraph,
+    *,
+    heuristic: str = "degree",
+    firstfit: str = "bitset",
+    use_kernel: bool = False,
+    mode: str = "workefficient",
+    strategy: str = "auto",
+    memory_budget: int = DEFAULT_D2_BUDGET,
+    coarsen: int = 1,
+    max_iters: int | None = None,
+) -> ColoringResult:
+    """Distance-2 coloring of ``g`` with the SGR super-step.
+
+    ``strategy="auto"`` precomputes the G² padded adjacency when its
+    estimated footprint (view + two-hop pair expansion) fits
+    ``memory_budget``, else composes the two hops on the fly per super-step.
+    ``coarsen`` only affects the on-the-fly strategy (chunks the worklist to
+    bound the composed-gather transient).
+    """
+    n = g.n
+    if n == 0:
+        return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
+                              algorithm="distance2_sgr")
+    max_iters = max_iters or n + 1
+    deg_ext = jnp.asarray(
+        np.concatenate([g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
+    )
+    w2_bound = max(g.two_hop_degree_bound(), 1)
+    pair_bound = g.m + int((g.degrees.astype(np.int64) ** 2).sum())
+    est_bytes = 4 * n * w2_bound + 16 * pair_bound
+    strategy = resolve_strategy(strategy, est_bytes, memory_budget)
+
+    if strategy == "precomputed":
+        adj2 = jnp.asarray(g.square().padded_adjacency())
+        step = partial(
+            sgr_step, adj2, deg_ext,
+            heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
+        )
+    else:
+        adj = jnp.asarray(g.padded_adjacency())
+        step = partial(
+            d2_sgr_step, adj, adj, deg_ext,
+            heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
+            include_first_hop=True, coarsen=coarsen,
+        )
+    return drive(step, n, mode, max_iters, algorithm="distance2_sgr")

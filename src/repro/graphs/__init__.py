@@ -4,6 +4,8 @@ from repro.graphs.generators import (
     grid2d,
     grid3d,
     honeycomb,
+    jacobian_band,
+    jacobian_tall_skinny,
     power_law,
     road,
     small_world,
@@ -17,6 +19,8 @@ __all__ = [
     "grid2d",
     "grid3d",
     "honeycomb",
+    "jacobian_band",
+    "jacobian_tall_skinny",
     "power_law",
     "road",
     "small_world",

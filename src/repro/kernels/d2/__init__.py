@@ -1,0 +1,5 @@
+"""Pallas TPU kernel for the distance-2 bitset FirstFit (DESIGN.md §11)."""
+from repro.kernels.d2.ops import d2_firstfit_bitset_tpu
+from repro.kernels.d2.ref import d2_firstfit_ref
+
+__all__ = ["d2_firstfit_bitset_tpu", "d2_firstfit_ref"]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the distance-2 bitset FirstFit kernel.
+
+Deliberately independent of the kernel and of ``core.firstfit``: candidate
+membership is checked by direct (quadratic) comparison over the union of
+both tiles, the most obviously-correct formulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["d2_firstfit_ref"]
+
+
+def d2_firstfit_ref(nc1: jax.Array, nc2: jax.Array) -> jax.Array:
+    """Smallest color in [1, W1+W2+1] absent from both tiles, per row."""
+    nc = jnp.concatenate([nc1, nc2], axis=1)
+    w, W = nc.shape
+    cand = jnp.arange(1, W + 2, dtype=nc.dtype)                 # (C,)
+    forbidden = (nc[:, None, :] == cand[None, :, None]).any(-1)
+    return (jnp.argmax(~forbidden, axis=1) + 1).astype(jnp.int32)

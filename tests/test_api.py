@@ -13,7 +13,7 @@ FIXTURES = {
 }
 
 EXPECTED = {"serial", "data_driven", "fused", "topology", "jp", "multihash",
-            "threestep"}
+            "threestep", "distance2"}
 
 
 def test_registry_contents():
@@ -35,8 +35,18 @@ def test_unknown_algorithm_raises():
     g = FIXTURES["er"]()
     with pytest.raises(ValueError, match="unknown algorithm 'nope'"):
         api.color(g, algorithm="nope")
-    with pytest.raises(ValueError, match="data_driven"):  # names are listed
+    # the error message lists every registered name
+    with pytest.raises(ValueError) as exc:
         api.color(g, algorithm="nope")
+    for name in api.algorithms():
+        assert name in str(exc.value), name
+
+
+def test_algorithms_stable_and_sorted():
+    names = api.algorithms()
+    assert list(names) == sorted(names)
+    assert api.algorithms() == names          # repeated calls are stable
+    assert {"bipartite", "distance2"} <= set(names)
 
 
 def test_opts_pass_through():
@@ -91,3 +101,19 @@ def test_color_batch_rejects_unsupported_fused_opts():
 def test_register_rejects_duplicates():
     with pytest.raises(ValueError, match="registered twice"):
         api.register("serial")(lambda g: None)
+
+
+def test_register_same_fn_is_idempotent():
+    fn = api.get_algorithm("serial")
+    assert api.register("serial")(fn) is fn   # re-registering the SAME fn is ok
+    assert api.get_algorithm("serial") is fn
+
+
+def test_color_batch_fused_bad_opts_lists_supported():
+    graphs = [FIXTURES["er"]()]
+    with pytest.raises(ValueError) as exc:
+        repro.color_batch(graphs, algorithm="fused", mode="fused", buckets=(4,))
+    msg = str(exc.value)
+    for opt in ("heuristic", "firstfit", "use_kernel", "max_iters"):
+        assert opt in msg                      # supported options are listed
+    assert "buckets" in msg and "mode" in msg  # offending options are named

@@ -1,0 +1,314 @@
+"""Distance-2 & bipartite partial coloring engine (repro.d2, DESIGN.md §11)."""
+import numpy as np
+import pytest
+
+import repro
+from repro import api
+from repro.core import ColoringResult, csr_from_edges, is_valid_coloring
+from repro.core.batch import GraphBatch
+from repro.d2 import (
+    BipartiteGraph,
+    color_bipartite,
+    color_distance2,
+    compress_jacobian_pattern,
+    greedy_serial_bipartite,
+    greedy_serial_d2,
+    validate_bipartite,
+    validate_d2,
+)
+from repro.graphs import (
+    build_suite,
+    erdos_renyi,
+    grid2d,
+    jacobian_band,
+    jacobian_tall_skinny,
+    power_law,
+    road,
+)
+
+FIXTURES = {
+    "er": lambda: erdos_renyi(300, 6.0, seed=0),
+    "grid": lambda: grid2d(12, 15),
+    "powerlaw": lambda: power_law(300, 5.0, seed=1),
+    "road": lambda: road(250, seed=2),
+}
+
+
+# --------------------------------------------------------------------------
+# host-side two-hop machinery (core/csr.py)
+# --------------------------------------------------------------------------
+
+def _brute_square_lists(g):
+    out = []
+    for v in range(g.n):
+        s = set()
+        for u in g.neighbors(v):
+            s.add(int(u))
+            s.update(int(w) for w in g.neighbors(u))
+        s.discard(v)
+        out.append(sorted(s))
+    return out
+
+
+@pytest.mark.parametrize("gname", list(FIXTURES))
+def test_square_matches_bruteforce(gname):
+    g = FIXTURES[gname]()
+    g2 = g.square()
+    assert [g2.neighbors(v).tolist() for v in range(g.n)] == _brute_square_lists(g)
+    assert g.two_hop_degree_bound() >= g2.max_degree
+
+
+def test_square_edge_cases():
+    empty = csr_from_edges(0, np.zeros(0, int), np.zeros(0, int))
+    assert empty.square().n == 0
+    edgeless = csr_from_edges(5, np.zeros(0, int), np.zeros(0, int))
+    assert edgeless.square().m == 0
+    assert edgeless.two_hop_degree_bound() == 0
+
+
+def test_padded_adjacency_rejects_silent_truncation():
+    g = FIXTURES["er"]()
+    with pytest.raises(ValueError, match="allow_truncate"):
+        g.padded_adjacency(g.max_degree - 1)
+    adj = g.padded_adjacency(g.max_degree - 1, allow_truncate=True)
+    assert adj.shape == (g.n, g.max_degree - 1)
+    # full-width and wider calls are unaffected
+    assert g.padded_adjacency().shape[1] == g.max_degree
+    assert g.padded_adjacency(g.max_degree + 4).shape[1] == g.max_degree + 4
+
+
+# --------------------------------------------------------------------------
+# validate_d2 (independent of engine and oracle)
+# --------------------------------------------------------------------------
+
+def test_validate_d2_semantics():
+    # path 0-1-2: [1,2,1] is a proper distance-1 coloring but NOT distance-2
+    g = csr_from_edges(3, np.array([0, 1]), np.array([1, 2]))
+    assert is_valid_coloring(g, np.array([1, 2, 1]))
+    assert not validate_d2(g, np.array([1, 2, 1]))
+    assert validate_d2(g, np.array([1, 2, 3]))
+    assert not validate_d2(g, np.array([1, 0, 2]))  # uncolored vertex
+
+
+# --------------------------------------------------------------------------
+# the distance-2 engine
+# --------------------------------------------------------------------------
+
+def test_distance2_registered():
+    assert "distance2" in api.algorithms()
+    assert "bipartite" in api.algorithms()
+
+
+@pytest.mark.parametrize("gname", list(FIXTURES))
+def test_distance2_valid_and_near_oracle(gname):
+    g = FIXTURES[gname]()
+    r = api.color(g, algorithm="distance2")
+    assert isinstance(r, ColoringResult)
+    assert r.converged
+    assert validate_d2(g, r.colors)
+    oracle = greedy_serial_d2(g)
+    assert validate_d2(g, oracle)
+    assert r.num_colors <= int(oracle.max()) + 1
+
+
+def test_distance2_full_suite_quality():
+    """Acceptance: every suite graph, valid D2 and <= serial oracle + 1."""
+    for name, g in build_suite(0.005).items():
+        r = color_distance2(g, mode="fused")
+        assert r.converged, name
+        assert validate_d2(g, r.colors), name
+        oracle = greedy_serial_d2(g)
+        assert r.num_colors <= int(oracle.max()) + 1, (
+            name, r.num_colors, int(oracle.max()))
+
+
+def test_distance2_strategies_bit_identical():
+    for gname in ("er", "grid", "road"):
+        g = FIXTURES[gname]()
+        pre = color_distance2(g, strategy="precomputed")
+        fly = color_distance2(g, strategy="onthefly")
+        assert (pre.colors == fly.colors).all(), gname
+        assert pre.iterations == fly.iterations, gname
+
+
+def test_distance2_modes_agree():
+    g = FIXTURES["powerlaw"]()
+    we = color_distance2(g, mode="workefficient")
+    fu = color_distance2(g, mode="fused")
+    assert (we.colors == fu.colors).all()
+    assert validate_d2(g, fu.colors)
+
+
+def test_distance2_budget_forces_onthefly():
+    g = FIXTURES["grid"]()
+    auto = color_distance2(g, memory_budget=1)  # everything blows 1 byte
+    pre = color_distance2(g, strategy="precomputed")
+    assert (auto.colors == pre.colors).all()
+    assert validate_d2(g, auto.colors)
+
+
+def test_distance2_onthefly_coarsened():
+    g = FIXTURES["er"]()
+    base = color_distance2(g, strategy="onthefly")
+    coarse = color_distance2(g, strategy="onthefly", coarsen=4)
+    assert validate_d2(g, coarse.colors)
+    # coarsening changes speculation order, not validity
+    assert coarse.converged and base.converged
+
+
+def test_distance2_kernel_matches_reference_path():
+    g = erdos_renyi(150, 4.0, seed=5)
+    rk = color_distance2(g, strategy="onthefly", use_kernel=True)
+    rn = color_distance2(g, strategy="onthefly", use_kernel=False)
+    assert (rk.colors == rn.colors).all()
+    assert validate_d2(g, rk.colors)
+
+
+def test_distance2_empty_and_edgeless():
+    empty = csr_from_edges(0, np.zeros(0, int), np.zeros(0, int))
+    assert color_distance2(empty).colors.shape == (0,)
+    edgeless = csr_from_edges(4, np.zeros(0, int), np.zeros(0, int))
+    r = color_distance2(edgeless)
+    assert (r.colors == 1).all() and r.converged
+
+
+# --------------------------------------------------------------------------
+# batched D2 (core/batch.py d2 path)
+# --------------------------------------------------------------------------
+
+def test_batched_d2_bit_identical_to_fused():
+    graphs = [FIXTURES[k]() for k in FIXTURES]
+    results = repro.color_batch(graphs, algorithm="distance2")
+    assert len(results) == len(graphs)
+    for g, rb in zip(graphs, results):
+        assert rb.algorithm == "batched_fused_sgr_d2"
+        assert validate_d2(g, rb.colors)
+        single = color_distance2(g, mode="fused", strategy="precomputed")
+        assert (rb.colors == single.colors).all()
+        assert rb.iterations == single.iterations
+
+
+def test_batched_d2_packing_uses_square_and_original_degrees():
+    graphs = [FIXTURES["er"](), FIXTURES["grid"]()]
+    batch = GraphBatch.from_graphs(graphs, distance2=True)
+    n_max = max(g.n for g in graphs)
+    for b, g in enumerate(graphs):
+        g2 = g.square()
+        adj = np.asarray(batch.adj[b])
+        nb = g2.neighbors(0)
+        assert (adj[0, : nb.size] == nb).all()
+        assert (adj[0, nb.size:] == n_max).all()
+        assert (np.asarray(batch.deg_ext[b, : g.n]) == g.degrees).all()
+
+
+def test_color_batch_distance2_rejects_unsupported_opts():
+    with pytest.raises(ValueError, match="not supported"):
+        repro.color_batch([FIXTURES["er"]()], algorithm="distance2", coarsen=2)
+
+
+def test_color_batch_fused_rejects_mismatched_packing():
+    from repro.core.batch import color_batch_fused
+
+    d1_batch = GraphBatch.from_graphs([FIXTURES["grid"]()])
+    with pytest.raises(ValueError, match="packed with distance2=False"):
+        color_batch_fused(d1_batch, distance2=True)
+    d2_batch = GraphBatch.from_graphs([FIXTURES["grid"]()], distance2=True)
+    with pytest.raises(ValueError, match="packed with distance2=True"):
+        color_batch_fused(d2_batch)
+    # a correctly-flagged pre-packed batch goes through
+    (r,) = color_batch_fused(d2_batch, distance2=True)
+    assert validate_d2(FIXTURES["grid"](), r.colors)
+
+
+# --------------------------------------------------------------------------
+# bipartite partial coloring / Jacobian compression
+# --------------------------------------------------------------------------
+
+def test_bipartite_graph_construction():
+    pattern = np.array([[1, 1, 0], [0, 1, 1]], dtype=bool)
+    bg = BipartiteGraph.from_dense(pattern)
+    assert (bg.n_rows, bg.n_cols, bg.nnz) == (2, 3, 4)
+    assert bg.row_to_col.tolist() == [0, 1, 1, 2]
+    assert bg.col_to_row.tolist() == [0, 0, 1, 1]
+    cg = bg.column_conflict_graph()
+    assert cg.neighbors(1).tolist() == [0, 2]  # col 1 conflicts with both
+    assert cg.neighbors(0).tolist() == [1]     # cols 0,2 never share a row
+
+
+def test_bipartite_banded_recovers_optimal():
+    """Acceptance: banded Jacobian -> exactly the optimal 2*band+1 groups."""
+    for band in (1, 2, 3):
+        bg = jacobian_band(60, band=band)
+        r = api.color(bg, algorithm="bipartite")
+        assert r.converged
+        assert validate_bipartite(bg, r.colors)
+        assert r.num_colors == 2 * band + 1
+        oracle = greedy_serial_bipartite(bg)
+        assert int(oracle.max()) == 2 * band + 1
+
+
+def test_bipartite_strategies_bit_identical():
+    bg = jacobian_tall_skinny(400, 24, nnz_per_row=3, seed=1)
+    pre = color_bipartite(bg, strategy="precomputed")
+    fly = color_bipartite(bg, strategy="onthefly")
+    assert (pre.colors == fly.colors).all()
+    assert validate_bipartite(bg, pre.colors)
+    oracle = greedy_serial_bipartite(bg)
+    assert validate_bipartite(bg, oracle)
+    assert pre.num_colors <= int(oracle.max()) + 1
+
+
+def test_compress_jacobian_pattern_end_to_end():
+    bg = jacobian_band(50, band=2)
+    cr = compress_jacobian_pattern(bg)
+    assert cr.num_groups == 5
+    # groups partition the columns
+    all_cols = np.sort(np.concatenate(cr.groups))
+    assert (all_cols == np.arange(bg.n_cols)).all()
+    seed = cr.seed_matrix()
+    assert seed.shape == (bg.n_cols, 5)
+    assert (seed.sum(axis=1) == 1).all()
+    # structural orthogonality: each row of J @ seed receives each of its
+    # nonzero columns in a distinct group slot (no collisions)
+    dense = np.zeros((bg.n_rows, bg.n_cols))
+    for r in range(bg.n_rows):
+        dense[r, bg.row_to_col[bg.row_offsets[r]: bg.row_offsets[r + 1]]] = 1
+    collisions = dense @ seed
+    assert collisions.max() == 1
+
+
+def test_compress_accepts_dense_and_coo():
+    pattern = np.array([[1, 1, 0, 0], [0, 1, 1, 0], [0, 0, 1, 1]], bool)
+    via_dense = compress_jacobian_pattern(pattern)
+    rows, cols = np.nonzero(pattern)
+    via_coo = compress_jacobian_pattern((3, 4, rows, cols))
+    assert via_dense.num_groups == via_coo.num_groups == 2
+    assert (via_dense.coloring.colors == via_coo.coloring.colors).all()
+
+
+def test_compress_refuses_unconverged_partition():
+    bg = jacobian_band(40, band=2)
+    with pytest.raises(ValueError, match="did not converge"):
+        compress_jacobian_pattern(bg, max_iters=1)
+
+
+def test_bipartite_empty():
+    bg = BipartiteGraph.from_coo(0, 0, np.zeros(0, int), np.zeros(0, int))
+    assert color_bipartite(bg).colors.shape == (0,)
+
+
+# --------------------------------------------------------------------------
+# serial oracles
+# --------------------------------------------------------------------------
+
+def test_serial_d2_largest_degree_first():
+    g = FIXTURES["powerlaw"]()
+    nat = greedy_serial_d2(g)
+    ldf = greedy_serial_d2(g, order="largest_degree_first")
+    assert validate_d2(g, nat) and validate_d2(g, ldf)
+
+
+def test_serial_bipartite_valid():
+    bg = jacobian_tall_skinny(200, 16, nnz_per_row=4, seed=3)
+    colors = greedy_serial_bipartite(bg)
+    assert validate_bipartite(bg, colors)

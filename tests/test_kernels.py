@@ -5,6 +5,8 @@ import pytest
 
 from repro.kernels.conflict.ops import conflict_tpu
 from repro.kernels.conflict.ref import conflict_ref
+from repro.kernels.d2.ops import d2_firstfit_bitset_tpu
+from repro.kernels.d2.ref import d2_firstfit_ref
 from repro.kernels.firstfit.ops import firstfit_bitset_tpu
 from repro.kernels.firstfit.ref import firstfit_ref
 
@@ -33,6 +35,45 @@ def test_firstfit_kernel_block_sizes(block_n):
 
 def test_firstfit_kernel_empty():
     out = firstfit_bitset_tpu(jnp.zeros((0, 4), jnp.int32))
+    assert out.shape == (0,)
+
+
+D2_SHAPES = [(7, 3, 9), (8, 8, 64), (64, 16, 48), (100, 5, 33), (33, 2, 130)]
+
+
+@pytest.mark.parametrize("w,W1,W2", D2_SHAPES)
+def test_d2_firstfit_kernel_matches_ref(w, W1, W2):
+    rng = np.random.default_rng(w * 100 + W1 + W2)
+    nc1 = rng.integers(0, W1 + W2 + 3, size=(w, W1)).astype(np.int32)
+    nc2 = rng.integers(0, W1 + W2 + 3, size=(w, W2)).astype(np.int32)
+    got = np.asarray(d2_firstfit_bitset_tpu(jnp.asarray(nc1), jnp.asarray(nc2)))
+    want = np.asarray(d2_firstfit_ref(jnp.asarray(nc1), jnp.asarray(nc2)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_d2_firstfit_kernel_union_semantics():
+    """A color forbidden by either tile is skipped; the union drives FFS."""
+    nc1 = jnp.asarray([[1, 0], [0, 0], [3, 0]], jnp.int32)
+    nc2 = jnp.asarray([[2, 3, 0], [0, 0, 0], [1, 2, 4]], jnp.int32)
+    got = np.asarray(d2_firstfit_bitset_tpu(nc1, nc2))
+    np.testing.assert_array_equal(got, [4, 1, 5])
+
+
+@pytest.mark.parametrize("block_n", [8, 16, 128])
+def test_d2_firstfit_kernel_block_sizes(block_n):
+    rng = np.random.default_rng(7)
+    nc1 = rng.integers(0, 40, size=(200, 9)).astype(np.int32)
+    nc2 = rng.integers(0, 40, size=(200, 29)).astype(np.int32)
+    got = np.asarray(
+        d2_firstfit_bitset_tpu(jnp.asarray(nc1), jnp.asarray(nc2), block_n=block_n)
+    )
+    want = np.asarray(d2_firstfit_ref(jnp.asarray(nc1), jnp.asarray(nc2)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_d2_firstfit_kernel_empty():
+    out = d2_firstfit_bitset_tpu(jnp.zeros((0, 4), jnp.int32),
+                                 jnp.zeros((0, 16), jnp.int32))
     assert out.shape == (0,)
 
 
