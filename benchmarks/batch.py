@@ -37,13 +37,19 @@ def bench_batch_throughput():
         t_e2e, _ = timeit(
             lambda: color_batch_fused(GraphBatch.from_graphs(graphs))
         )
+        # width-bucketed sub-batches (§12 batch-level load balancing): the
+        # list path groups graphs by pow2 max degree before packing
+        t_lb, res_lb = timeit(lambda: color_batch_fused(graphs))
 
-        for g, r_l, r_b in zip(graphs, res_loop, res_bat):
+        for g, r_l, r_b, r_lb in zip(graphs, res_loop, res_bat, res_lb):
             assert is_valid_coloring(g, r_b.colors)
             assert (r_b.colors == r_l.colors).all()  # serving == loop, bitwise
+            assert (r_lb.colors == r_l.colors).all()  # grouping is perf-only
 
         rows.append(row(f"batch/B{B}/loop_b1", t_loop, round(B / t_loop, 1)))
         rows.append(row(f"batch/B{B}/batched", t_bat, round(B / t_bat, 1)))
         rows.append(row(f"batch/B{B}/batched_e2e", t_e2e, round(B / t_e2e, 1)))
+        rows.append(row(f"batch/B{B}/batched_lb", t_lb, round(B / t_lb, 1)))
         rows.append(row(f"batch/B{B}/speedup", t_bat, round(t_loop / t_bat, 2)))
+        rows.append(row(f"batch/B{B}/speedup_lb", t_lb, round(t_loop / t_lb, 2)))
     return rows

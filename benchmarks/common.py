@@ -27,5 +27,29 @@ def timeit(fn, repeats: int | None = None):
     return best, result
 
 
+def timeit_median(fn, repeats: int | None = None):
+    """(median_seconds, compile_seconds, last_result).
+
+    The first call is timed separately — it pays jit tracing + compilation —
+    and the reported wall time is the median of ``repeats`` post-warmup
+    calls, so one noisy sample cannot skew the perf trajectory the way a
+    single-shot (or best-of) measurement can.  ``compile_seconds``
+    approximates the one-time cost as ``first_call - median``.
+    """
+    repeats = max(repeats or REPEATS, 1)
+    t0 = time.perf_counter()
+    result = fn()
+    first = time.perf_counter() - t0
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    mid = len(times) // 2
+    median = times[mid] if len(times) % 2 else 0.5 * (times[mid - 1] + times[mid])
+    return median, max(first - median, 0.0), result
+
+
 def row(name: str, seconds: float, derived) -> tuple[str, float, str]:
     return (name, seconds * 1e6, str(derived))

@@ -1,14 +1,17 @@
 """Run every paper benchmark. Prints ``name,us_per_call,derived`` CSV and
 writes ``BENCH_coloring.json`` — the machine-readable perf trajectory.
 
-Scale via REPRO_BENCH_SCALE (default 0.15); see benchmarks/common.py.
-The roofline table (§Roofline) is separate: ``python -m benchmarks.roofline``
-consumes the dry-run JSON produced by ``repro.launch.dryrun``.
+Scale via ``--scale {tiny,small,paper}`` or REPRO_BENCH_SCALE (default 0.15);
+see benchmarks/common.py.  The roofline table (§Roofline) is separate:
+``python -m benchmarks.roofline`` consumes the dry-run JSON produced by
+``repro.launch.dryrun``.
 
 ``BENCH_coloring.json`` records per-algorithm colors + wall-clock on a small
 fixed suite (REPRO_BENCH_JSON_SCALE, default 0.02) so CI and future PRs can
-diff quality/perf without parsing the CSV.  ``--json-only`` skips the CSV
-matrix.
+diff quality/perf without parsing the CSV.  Timing method (schema 2):
+``seconds`` is the MEDIAN of post-warmup calls and ``compile_seconds`` the
+separately-measured one-time jit cost — single-shot numbers used to charge
+compilation to the algorithm.  ``--json-only`` skips the CSV matrix.
 """
 from __future__ import annotations
 
@@ -22,22 +25,33 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)  # so `python benchmarks/run.py` finds `benchmarks.*`
 
 JSON_PATH = os.environ.get("REPRO_BENCH_JSON", "BENCH_coloring.json")
-JSON_SCALE = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
 JSON_GRAPHS = ("rmat-er", "rmat-g", "G3_circuit", "europe.osm", "thermal2")
+
+# --scale presets: (CSV-matrix scale, JSON-suite scale).  ``tiny`` is the CI
+# smoke configuration — its JSON scale is pinned at 0.01 so the uploaded
+# BENCH_coloring.json artifacts stay comparable across CI runs (the file
+# itself is a generated artifact, gitignored); ``paper`` matches the default
+# full matrix.
+SCALE_PRESETS = {
+    "tiny": (0.02, 0.01),
+    "small": (0.05, 0.02),
+    "paper": (0.15, 0.02),
+}
 
 
 def bench_coloring_json(path: str = JSON_PATH) -> dict:
     """Per-algorithm colors + wall-clock on the small suite, as JSON."""
-    from benchmarks.common import timeit
+    from benchmarks.common import timeit_median
     from repro import api
     from repro.core import is_valid_coloring
     from repro.d2 import compress_jacobian_pattern, validate_bipartite
     from repro.graphs import build_graph, jacobian_band
 
-    graphs = {name: build_graph(name, JSON_SCALE) for name in JSON_GRAPHS}
+    json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
+    graphs = {name: build_graph(name, json_scale) for name in JSON_GRAPHS}
     doc = {
-        "schema": 1,
-        "scale": JSON_SCALE,
+        "schema": 2,
+        "scale": json_scale,
         "graphs": {
             name: {"n": g.n, "m": g.m, "max_degree": g.max_degree}
             for name, g in graphs.items()
@@ -51,24 +65,28 @@ def bench_coloring_json(path: str = JSON_PATH) -> dict:
         per_graph = {}
         for name, g in graphs.items():
             try:
-                seconds, r = timeit(lambda: api.color(g, algorithm=alg))
+                seconds, compile_s, r = timeit_median(
+                    lambda: api.color(g, algorithm=alg))
             except Exception as e:  # keep the harness going
                 per_graph[name] = {"error": f"{type(e).__name__}: {e}"}
                 continue
             per_graph[name] = {
                 "colors": r.num_colors,
                 "seconds": round(seconds, 6),
+                "compile_seconds": round(compile_s, 6),
                 "iterations": r.iterations,
                 "valid": bool(is_valid_coloring(g, r.colors)),
             }
         doc["algorithms"][alg] = per_graph
     band = 2
-    bg = jacobian_band(int(20000 * JSON_SCALE) or 64, band=band)
-    seconds, cr = timeit(lambda: compress_jacobian_pattern(bg, mode="fused"))
+    bg = jacobian_band(int(20000 * json_scale) or 64, band=band)
+    seconds, compile_s, cr = timeit_median(
+        lambda: compress_jacobian_pattern(bg, mode="fused"))
     doc["bipartite"][f"banded_b{band}"] = {
         "groups": cr.num_groups,
         "optimal": 2 * band + 1,
         "seconds": round(seconds, 6),
+        "compile_seconds": round(compile_s, 6),
         "valid": bool(validate_bipartite(bg, cr.coloring.colors)),
     }
     with open(path, "w") as f:
@@ -78,7 +96,18 @@ def bench_coloring_json(path: str = JSON_PATH) -> dict:
 
 
 def main() -> None:
-    json_only = "--json-only" in sys.argv
+    args = sys.argv[1:]
+    if "--scale" in args:
+        tail = args[args.index("--scale") + 1:]
+        preset = tail[0] if tail else None
+        if preset not in SCALE_PRESETS:
+            raise SystemExit(
+                f"unknown --scale {preset!r}; options: {sorted(SCALE_PRESETS)}")
+        csv_scale, json_scale = SCALE_PRESETS[preset]
+        # set BEFORE benchmarks.common/paper are imported (they read at import)
+        os.environ["REPRO_BENCH_SCALE"] = str(csv_scale)
+        os.environ["REPRO_BENCH_JSON_SCALE"] = str(json_scale)
+    json_only = "--json-only" in args
     if not json_only:
         from benchmarks.d2 import D2_BENCHES
         from benchmarks.paper import ALL_BENCHES

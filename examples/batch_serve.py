@@ -15,7 +15,7 @@ import time
 sys.path.insert(0, "src")
 
 import repro  # noqa: E402
-from repro.core import GraphBatch, is_valid_coloring  # noqa: E402
+from repro.core import is_valid_coloring  # noqa: E402
 from repro.core.batch import color_batch_fused  # noqa: E402
 from repro.graphs import serving_mix  # noqa: E402
 
@@ -36,16 +36,17 @@ def main():
     loop_results = [repro.color(g, "fused") for g in graphs]
     t_loop = time.perf_counter() - t0
 
-    # ---- batched serving: one device program per B requests -----------------
+    # ---- batched serving: one device program per width-homogeneous group ----
+    # the list path width-buckets each batch (§12 batch-level load balancing)
+    # so one skewed request cannot force its Δmax padding onto the others
     batches = [graphs[i : i + args.batch]
                for i in range(0, len(graphs), args.batch)]
-    packed = [GraphBatch.from_graphs(bs) for bs in batches]
-    for p in packed:
-        color_batch_fused(p)                          # warm the jit caches
+    for bs in batches:
+        color_batch_fused(bs)                         # warm the jit caches
     t0 = time.perf_counter()
     batch_results = []
-    for p in packed:
-        batch_results.extend(color_batch_fused(p))
+    for bs in batches:
+        batch_results.extend(color_batch_fused(bs))
     t_batch = time.perf_counter() - t0
 
     ok = all(is_valid_coloring(g, r.colors)

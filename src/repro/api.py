@@ -99,7 +99,8 @@ def color_batch(
     if algorithm in ("fused", "distance2"):
         from repro.core.batch import color_batch_fused
 
-        supported = {"heuristic", "firstfit", "use_kernel", "max_iters"}
+        supported = {"heuristic", "firstfit", "use_kernel", "max_iters",
+                     "tail_serial"}
         extra = set(opts) - supported
         if extra:
             raise ValueError(

@@ -1,7 +1,9 @@
 """Core graph-coloring engine — the paper's contribution in JAX."""
-from repro.core.batch import GraphBatch, batched_sgr_step, color_batch_fused
+from repro.core.batch import (GraphBatch, batched_ragged_step,
+                              batched_sgr_step, color_batch_fused)
 from repro.core.coloring import ColoringResult, color_data_driven, color_fused
-from repro.core.csr import CSRGraph, DeviceGraph, csr_from_edges, next_pow2
+from repro.core.csr import (CSRGraph, DeviceCSR, DeviceGraph,
+                            auto_tile_thresholds, csr_from_edges, next_pow2)
 from repro.core.jp import color_jp, color_multihash
 from repro.core.serial import color_serial, greedy_serial
 from repro.core.threestep import color_threestep
@@ -10,14 +12,17 @@ from repro.core.validate import is_valid_coloring, num_colors, quality_report
 
 __all__ = [
     "CSRGraph",
+    "DeviceCSR",
     "DeviceGraph",
     "GraphBatch",
+    "auto_tile_thresholds",
     "csr_from_edges",
     "next_pow2",
     "ColoringResult",
     "color_data_driven",
     "color_fused",
     "color_batch_fused",
+    "batched_ragged_step",
     "batched_sgr_step",
     "color_topology",
     "color_jp",

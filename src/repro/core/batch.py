@@ -16,10 +16,16 @@ padding lanes inside a row and the all-sentinel padding *rows* of smaller
 graphs inert.  Worklists are ``(B, n_max)`` with sentinel fill; a finished
 graph's row compacts to all-sentinel and its lanes become no-ops.
 
-Determinism: with ``coarsen_ff == coarsen_cr == 1`` (the batched default)
-each graph's color evolution depends only on its own rows, so the batched
-result is bit-identical to running ``mode="fused"`` per graph — tested in
-``tests/test_batch.py``.
+Since §12 the batched super-step is the ROTATED one (one gather serves
+conflict detection and FirstFit) and the per-graph adaptive
+tail-serialization carries over: a graph whose worklist drops to its tail
+threshold — or stalls — FREEZES (its lanes turn sentinel) while the others
+keep speculating; when every graph is frozen or done, one vmapped serial
+tail pass finishes all of them.  Each graph therefore sees exactly the
+schedule the per-graph fused driver would give it, so the batched result is
+bit-identical to per-graph ``mode="fused"`` runs whenever those resolve to a
+single degree class (always true below the auto-tiling size gate) — tested
+in ``tests/test_batch.py``.
 """
 from __future__ import annotations
 
@@ -32,10 +38,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.coloring import ColoringResult, sgr_step
-from repro.core.csr import CSRGraph
+from repro.core.coloring import (
+    ColoringResult,
+    DenseRows,
+    _stalled,
+    order_tail,
+    ragged_superstep,
+    resolve_tail_threshold,
+    serial_tail_step,
+    sgr_step,
+)
+from repro.core.csr import CSRGraph, next_pow2
 
-__all__ = ["GraphBatch", "batched_sgr_step", "color_batch_fused"]
+__all__ = ["GraphBatch", "batched_sgr_step", "batched_ragged_step",
+           "color_batch_fused"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,7 +121,7 @@ def batched_sgr_step(
     coarsen_cr: int = 1,
     use_kernel: bool = False,
 ):
-    """``sgr_step`` over a leading batch axis: (B, …) in, (B, …) out."""
+    """Classic ``sgr_step`` over a leading batch axis: (B, …) in, (B, …) out."""
     step = partial(
         sgr_step,
         heuristic=heuristic,
@@ -117,30 +133,95 @@ def batched_sgr_step(
     return jax.vmap(step)(adj, deg_ext, colors_ext, wl)
 
 
-@partial(jax.jit, static_argnames=("heuristic", "kind", "use_kernel"))
-def _run_batch(adj, deg_ext, sizes, max_iters, *, heuristic, kind, use_kernel):
+def _graph_ragged_step(adj, deg_ext, colors_ext, wl, *, heuristic, kind,
+                       use_kernel, pack_degrees=False):
+    """One graph's rotated super-step over its dense packed adjacency."""
+    return ragged_superstep(
+        DenseRows(adj).rows, deg_ext, colors_ext, wl,
+        heuristic=heuristic, kind=kind, use_kernel=use_kernel,
+        pack_degrees=pack_degrees,
+    )
+
+
+@partial(jax.jit, static_argnames=("heuristic", "kind", "use_kernel",
+                                   "pack_degrees"))
+def batched_ragged_step(adj, deg_ext, colors_ext, wl, *,
+                        heuristic: str = "degree", kind: str = "bitset",
+                        use_kernel: bool = False, pack_degrees: bool = False):
+    """Rotated super-step over a leading batch axis (§12)."""
+    step = partial(_graph_ragged_step, heuristic=heuristic, kind=kind,
+                   use_kernel=use_kernel, pack_degrees=pack_degrees)
+    return jax.vmap(step)(adj, deg_ext, colors_ext, wl)
+
+
+@partial(jax.jit, static_argnames=("heuristic", "kind", "use_kernel",
+                                   "tail_enabled", "pack_degrees"))
+def _run_batch(adj, deg_ext, sizes, thrs, max_iters, *, heuristic, kind,
+               use_kernel, tail_enabled, pack_degrees=False):
+    """Speculative phase: per-graph freeze on threshold/stall (§12)."""
     B, n_max, _ = adj.shape
     ids = jnp.arange(n_max, dtype=jnp.int32)
-    wl0 = jnp.where(ids[None, :] < sizes[:, None], ids[None, :], n_max)
-    colors0 = jnp.zeros((B, n_max + 1), dtype=jnp.int32)
+    in_graph = ids[None, :] < sizes[:, None]
+    wl0 = jnp.where(in_graph, ids[None, :], n_max)
+    # bootstrap identity: every real vertex takes color 1 (see coloring.py)
+    colors0 = jnp.concatenate(
+        [jnp.where(in_graph, 1, 0), jnp.zeros((B, 1), jnp.int32)], axis=1
+    ).astype(jnp.int32)
+    counts0 = sizes.astype(jnp.int32)
+    iters0 = (sizes > 0).astype(jnp.int32)
     zeros = jnp.zeros((B,), dtype=jnp.int32)
+    active0 = counts0 > (thrs if tail_enabled else 0)
 
     def cond(state):
-        _, _, counts, it, _, _ = state
-        return jnp.any(counts > 0) & (it < max_iters)
+        _, _, _, _, active, _, _, it = state
+        return jnp.any(active) & (it < max_iters)
 
     def body(state):
-        colors_ext, wl, counts, it, iters_b, work_b = state
-        live = counts > 0
-        colors_ext, wl, counts = batched_sgr_step(
-            adj, deg_ext, colors_ext, wl,
+        colors_ext, wl, counts, prev, active, iters_b, work_b, it = state
+        wl_in = jnp.where(active[:, None], wl, n_max)
+        colors_ext, wl_new, cnt_new = batched_ragged_step(
+            adj, deg_ext, colors_ext, wl_in,
             heuristic=heuristic, kind=kind, use_kernel=use_kernel,
+            pack_degrees=pack_degrees,
         )
-        return (colors_ext, wl, counts, it + 1,
-                iters_b + live.astype(jnp.int32), work_b + counts)
+        new_counts = jnp.where(active, cnt_new, counts)
+        new_prev = jnp.where(active, counts, prev)
+        wl = jnp.where(active[:, None], wl_new, wl)
+        iters_b = iters_b + active.astype(jnp.int32)
+        work_b = work_b + jnp.where(active, cnt_new, 0)
+        it = it + 1
+        still = active & (new_counts > 0) & (it < max_iters)
+        if tail_enabled:
+            still &= (new_counts > thrs) & ~_stalled(iters_b, new_counts,
+                                                     new_prev)
+        return (colors_ext, wl, new_counts, new_prev, still, iters_b,
+                work_b, it)
 
-    state = (colors0, wl0, sizes.astype(jnp.int32), jnp.int32(0), zeros, zeros)
+    state = (colors0, wl0, counts0, counts0, active0, iters0, zeros,
+             jnp.int32(1))
     return lax.while_loop(cond, body, state)
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _run_batch_tail(adj, deg_ext, colors_ext, wl, run_tail, stalled, sizes, *,
+                    kind):
+    """Vmapped serial tail: one sequential pass finishes every live graph.
+
+    Stalled graphs discard their speculative colors and serialize ALL their
+    vertices (largest-degree-first); threshold-frozen graphs serialize just
+    their remaining worklists — exactly what the per-graph driver does.
+    """
+    B, n_max, _ = adj.shape
+    ids = jnp.arange(n_max, dtype=jnp.int32)
+    full_wl = jnp.where(ids[None, :] < sizes[:, None], ids[None, :], n_max)
+    wl = jnp.where(stalled[:, None], full_wl, wl)
+    ordered = jax.vmap(order_tail)(wl, deg_ext)
+    wl_in = jnp.where(run_tail[:, None], ordered, n_max)
+
+    def tail_one(adj_b, colors_b, wl_b):
+        return serial_tail_step(DenseRows(adj_b).row1, colors_b, wl_b, kind)
+
+    return jax.vmap(tail_one)(adj, colors_ext, wl_in)
 
 
 def color_batch_fused(
@@ -151,14 +232,17 @@ def color_batch_fused(
     use_kernel: bool = False,
     max_iters: int | None = None,
     distance2: bool = False,
+    tail_serial="auto",
 ) -> list[ColoringResult]:
     """Color B graphs in ONE jitted batched ``while_loop``; one result each.
 
-    The loop runs until the slowest graph converges; finished graphs idle as
-    all-sentinel no-op rows (their reported ``iterations`` counts only live
-    super-steps).  ``padded_work`` charges every graph the full ``n_max``
-    lanes per global step — the capacity cost of batching — while
-    ``work_items`` counts its genuinely live worklist entries.
+    The speculative loop runs until every graph converges, freezes at its
+    tail threshold, or stalls; frozen graphs idle as all-sentinel no-op rows
+    (their reported ``iterations`` count only live super-steps).  One
+    vmapped ``serial_tail_step`` then finishes all frozen worklists at once.
+    ``padded_work`` charges every graph the full ``n_max × W`` gather cells
+    per global step — the capacity cost of batching — while ``work_items``
+    counts its genuinely live worklist entries.
 
     ``distance2=True`` is the batched D2 path: the packed adjacency is each
     graph's square (see ``GraphBatch.from_graphs``), everything downstream
@@ -174,6 +258,34 @@ def color_batch_fused(
             )
         batch = graphs
     else:
+        # Width-bucketed sub-batches (batch-level Merrill load balancing,
+        # §12): one skewed graph would otherwise force its Δmax padding onto
+        # every row of the stacked tensor.  Results are per-graph independent
+        # (each graph sees exactly its per-graph fused schedule), so grouping
+        # is a pure perf policy — colors are identical either way.  Callers
+        # who pre-packed a GraphBatch keep their own layout.
+        graphs = list(graphs)
+        keys = [
+            next_pow2(max(
+                g.two_hop_degree_bound() if distance2 else g.max_degree, 1))
+            for g in graphs
+        ]
+        if len(set(keys)) > 1:
+            by_key: dict[int, list[int]] = {}
+            for i, k in enumerate(keys):
+                by_key.setdefault(k, []).append(i)
+            results: list = [None] * len(graphs)
+            for idxs in by_key.values():
+                sub = color_batch_fused(
+                    GraphBatch.from_graphs([graphs[i] for i in idxs],
+                                           distance2=distance2),
+                    heuristic=heuristic, firstfit=firstfit,
+                    use_kernel=use_kernel, max_iters=max_iters,
+                    distance2=distance2, tail_serial=tail_serial,
+                )
+                for i, r in zip(idxs, sub):
+                    results[i] = r
+            return results
         batch = GraphBatch.from_graphs(graphs, distance2=distance2)
     algo = "batched_fused_sgr_d2" if distance2 else "batched_fused_sgr"
     if batch.B == 0:
@@ -183,24 +295,46 @@ def color_batch_fused(
                 for _ in range(batch.B)]
     max_iters = max_iters or batch.n_max + 1
     sizes = jnp.asarray(np.asarray(batch.sizes, dtype=np.int32))
-    colors_ext, _, counts, it, iters_b, work_b = _run_batch(
-        batch.adj, batch.deg_ext, sizes, jnp.int32(max_iters),
-        heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
+    tail_enabled, _ = resolve_tail_threshold(tail_serial, batch.n_max)
+    thrs_np = np.asarray(
+        [resolve_tail_threshold(tail_serial, n)[1] for n in batch.sizes],
+        dtype=np.int32,
     )
-    colors = np.asarray(colors_ext[:, : batch.n_max])
+    colors_ext, wl, counts, prev, _, iters_b, work_b, it = _run_batch(
+        batch.adj, batch.deg_ext, sizes, jnp.asarray(thrs_np),
+        jnp.int32(max_iters),
+        heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
+        tail_enabled=tail_enabled,
+        # degrees <= packed width and colors <= width + 1 (see coloring.py)
+        pack_degrees=batch.width < 2**15 - 1,
+    )
     counts = np.asarray(counts)
-    iters_b = np.asarray(iters_b)
-    work_b = np.asarray(work_b)
-    steps = int(it)
+    prev = np.asarray(prev)
+    iters_b = np.asarray(iters_b).copy()
+    work_b = np.asarray(work_b).copy()
+    steps = int(it) - 1
+    sizes_np = np.asarray(batch.sizes, dtype=np.int32)
+    run_tail = tail_enabled & (counts > 0) & (iters_b < max_iters)
+    stalled = run_tail & (counts > thrs_np) & _stalled(iters_b, counts, prev)
+    if run_tail.any():
+        colors_ext = _run_batch_tail(
+            batch.adj, batch.deg_ext, colors_ext, wl, jnp.asarray(run_tail),
+            jnp.asarray(stalled), jnp.asarray(sizes_np), kind=firstfit,
+        )
+        iters_b += run_tail
+        work_b += np.where(stalled, sizes_np, np.where(run_tail, counts, 0))
+        counts = np.where(run_tail, 0, counts)
+    colors = np.asarray(colors_ext[:, : batch.n_max])
+    cells = batch.n_max * batch.width
     out = []
     for b, n in enumerate(batch.sizes):
-        # first super-step processes all n vertices; work_b accumulates the
-        # live counts of every later step (mirrors _run_fused's accounting)
+        # the bootstrap step processes all n vertices; work_b accumulates the
+        # live counts of every later step (mirrors the fused driver)
         out.append(ColoringResult(
             colors[b, :n].copy(),
             int(iters_b[b]),
             int(work_b[b]) + n if n else 0,
-            steps * batch.n_max,
+            steps * cells + (cells if run_tail[b] else 0),
             converged=int(counts[b]) == 0,
             algorithm=algo,
         ))

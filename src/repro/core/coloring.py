@@ -7,21 +7,34 @@ The paper's contribution, adapted to the TPU/XLA execution model (DESIGN.md §3)
 * color clearing on conflict          -> kept verbatim (correctness-critical here too)
 * kernel fusion + global barrier      -> each super-step is ONE jitted XLA
                                          computation; the loop carry is the barrier
-* thread coarsening                   -> ``coarsen_ff`` / ``coarsen_cr`` sequential
-                                         chunks per super-step (fewer concurrent
-                                         speculations -> fewer conflicts)
-* Merrill load balancing              -> degree buckets, each processed at its own
-                                         padded width (``buckets=(16, 128)``)
+* thread coarsening                   -> sequential chunks per super-step (fewer
+                                         concurrent speculations -> fewer conflicts)
+* Merrill load balancing              -> degree classes, each processed at its own
+                                         tile width
 
-Two execution modes:
+Two execution ENGINES (DESIGN.md §12):
 
-* ``workefficient`` (default) — host loop; the worklist buffer is re-sliced to
-  the next power of two of the live count each super-step, so compute tracks
-  the worklist size (the paper's work-efficiency argument) at the cost of at
-  most log2(n) compilation cache entries.
-* ``fused`` — a single ``lax.while_loop`` over full-capacity buffers: the whole
-  coloring is one device program (what you deploy on TPU where lanes are wide
-  and re-dispatch is expensive).
+* ``ragged`` (default) — the CSR-native rotated super-step: ONE adjacency
+  gather and ONE neighbor-color gather per iteration serve BOTH conflict
+  detection and FirstFit; degree-tiled dispatch sizes each worklist class's
+  gather to its own tile width (O(edges) traffic, not O(n·Δmax)); adaptive
+  tail-serialization collapses slow-shrinking worklist cascades into one
+  sequential-on-device FirstFit pass that is conflict-free by construction.
+* ``padded`` — the same schedule dispatched through the original dense
+  ``(n, Δmax)`` padded-adjacency table.  Padding lanes are sentinel-inert, so
+  ``padded`` and ``ragged`` produce bit-identical colors — the engines differ
+  only in memory layout and bandwidth (tested).
+* ``classic`` — the pre-§12 two-phase super-step (FirstFit kernel, then a
+  separate ConflictResolve kernel re-gathering the tiles), kept as the
+  paper-faithful baseline and for A/B benchmarking.
+
+Two execution modes, orthogonal to the engine:
+
+* ``workefficient`` (default) — host loop; each class's worklist buffer is
+  re-sliced to the next power of two of its live count each super-step.
+* ``fused`` — a single ``lax.while_loop`` over full-capacity buffers: the
+  speculative phase is one device program (plus at most one serial-tail
+  dispatch), what you deploy on TPU where re-dispatch is expensive.
 """
 from __future__ import annotations
 
@@ -35,18 +48,43 @@ import numpy as np
 from jax import lax
 
 from repro.api import register
-from repro.core.csr import CSRGraph, next_pow2
+from repro.core.csr import CSRGraph, DeviceCSR, auto_tile_thresholds, next_pow2
 from repro.core.firstfit import FF_FUNCS
-from repro.core.heuristics import conflict_lose_flags
+from repro.core.heuristics import conflict_lose_flags, conflict_lose_lanes
 
 __all__ = [
     "ColoringResult",
+    "DenseRows",
     "color_data_driven",
     "color_fused",
     "fused_result",
+    "order_tail",
+    "provider_tail",
+    "ragged_superstep",
     "run_fused_loop",
+    "run_ragged_engine",
     "run_workefficient_loop",
+    "resolve_tail_threshold",
+    "serial_tail_step",
 ]
+
+# Row providers travel INTO module-level jitted engine functions as pytrees,
+# so jit compilations are keyed on (provider type, aux config, array shapes)
+# and cached across color() calls — never on per-call Python closures.
+jax.tree_util.register_pytree_node(
+    DeviceCSR,
+    lambda d: ((d.row_starts, d.col_padded, d.deg_ext), (d.n, d.max_width)),
+    lambda aux, ch: DeviceCSR(*ch, *aux),
+)
+
+# Adaptive tail-serialization: the worklist "stalls" when a super-step
+# retires less than 1 - STALL_NUM/STALL_DEN of it.  Cascading graphs (grids,
+# circuits, roads) shrink by ~0.1-1%/step for tens to hundreds of steps —
+# the stall detector hands those to the serial tail after ~3 steps, where
+# one sequential pass crosses the whole frontier.  Integer math so host and
+# device drivers decide identically (int32-safe far past this repo's suite
+# sizes).
+STALL_NUM, STALL_DEN = 9, 10
 
 
 @dataclasses.dataclass
@@ -54,7 +92,7 @@ class ColoringResult:
     colors: np.ndarray
     iterations: int
     work_items: int          # worklist entries actually live across super-steps
-    padded_work: int         # lanes dispatched (>= work_items; capacity waste)
+    padded_work: int         # gather cells dispatched: Σ lanes × tile width
     converged: bool
     algorithm: str = "data_driven_sgr"
 
@@ -129,7 +167,7 @@ def _chunk_bounds(cap: int, nchunks: int):
 
 
 # --------------------------------------------------------------------------
-# one super-step: FirstFit -> ConflictResolve(+clear) -> compaction
+# classic super-step: FirstFit -> ConflictResolve(+clear) -> compaction
 # --------------------------------------------------------------------------
 
 @partial(
@@ -181,12 +219,440 @@ def sgr_step(
 
 
 # --------------------------------------------------------------------------
-# drivers
+# the rotated (fused) super-step — ONE gather serves both phases (§12)
+# --------------------------------------------------------------------------
+# Key observation: a worklist vertex FirstFits a color that is, by
+# construction, distinct from every color visible in its gathered tile — so
+# fresh conflicts can only involve OTHER worklist vertices recolored in the
+# same step.  Rotating the loop (verify the previous step's speculation, then
+# immediately recolor the losers from the SAME tile) therefore needs exactly
+# one adjacency gather and one neighbor-color gather per iteration, where the
+# classic two-phase step pays both twice.  Every vertex this step recolors is
+# re-verified next step; termination (nobody recolored) certifies validity.
+
+def ragged_superstep(rows_fn, deg_ext, colors_ext, wl, *,
+                     heuristic: str = "degree", kind: str = "bitset",
+                     use_kernel: bool = False, coarsen: int = 1,
+                     colors_read=None, pack_degrees: bool = False):
+    """One rotated super-step: ConflictResolve + FirstFit + compaction.
+
+    ``rows_fn(ids) -> (w, W)`` provides the sentinel-padded neighbor tile —
+    a ``DeviceCSR`` class gather, a dense padded-row gather, or a composed
+    two-hop gather (repro.d2); the engine is generic over the row provider.
+    ``coarsen`` chunks the worklist so later chunks observe earlier chunks'
+    recolorings (the thread-coarsening knob, fewer concurrent speculations).
+
+    ``colors_read`` is the snapshot the FIRST chunk reads (later chunks read
+    the accumulating state).  Degree-tiled drivers pass the iteration-start
+    snapshot so every class speculates against the same state — which makes
+    a tiled super-step bit-identical to the single-class one (classes
+    partition the worklist and their writes are disjoint).
+
+    ``pack_degrees`` fuses the neighbor-color and neighbor-degree gathers
+    into ONE gather of ``color | degree << 16`` words — degrees are static
+    and an O(n) repack per step is far cheaper than a second (w, W) scattered
+    gather.  Callers enable it when both fields provably fit 15 bits (colors
+    are bounded by the gather width + 1).  Packed or not, the arithmetic is
+    exact, so results are bit-identical either way.
+    """
+    n = colors_ext.shape[0] - 1
+    cap = wl.shape[0]
+    read = colors_ext if colors_read is None else colors_read
+    chunk_bounds = _chunk_bounds(cap, coarsen)
+    # the packed word array must track earlier chunks' writes, so a chunked
+    # step would repack O(n) per chunk — fall back to separate gathers there
+    pack_degrees = pack_degrees and len(chunk_bounds) == 1
+    need_parts = []
+    for lo, hi in chunk_bounds:
+        ids = wl[lo:hi]
+        rows = rows_fn(ids)
+        my_c = read[ids]
+        my_d = deg_ext[ids]
+        if pack_degrees and not use_kernel:
+            tile = (read + (deg_ext << 16))[rows]
+            nc = tile & jnp.int32(0xFFFF)
+            nd = tile >> 16
+        else:
+            nc = read[rows]
+            nd = deg_ext[rows]
+        if use_kernel:
+            from repro.kernels.superstep.ops import superstep_tpu
+
+            new_c, need = superstep_tpu(ids, rows, my_c, nc, my_d, nd,
+                                        heuristic)
+        else:
+            same, lose_lane = conflict_lose_lanes(ids, rows, my_c, nc, my_d,
+                                                  nd, heuristic)
+            need = jnp.any(lose_lane, axis=1) | (my_c == 0)
+            # lanes I beat are provably recoloring too — refit as if cleared
+            # (the classic engine's clear-then-refit dynamics, in one pass)
+            ff_nc = jnp.where(same & ~lose_lane, 0, nc)
+            new_c = jnp.where(need, FF_FUNCS[kind](ff_nc), my_c)
+        valid = ids < n
+        need = need & valid
+        new_c = jnp.where(valid, new_c, 0).astype(colors_ext.dtype)
+        colors_ext = colors_ext.at[ids].set(new_c)
+        read = colors_ext  # later chunks observe earlier chunks' writes
+        need_parts.append(need)
+    need = jnp.concatenate(need_parts) if len(need_parts) > 1 else need_parts[0]
+    new_wl, new_count = compact(wl, need, sentinel=n)
+    return colors_ext, new_wl, new_count
+
+
+def serial_tail_step(row1_fn, colors_ext, wl, kind: str = "bitset"):
+    """Sequential-on-device FirstFit over ``wl`` — conflict-free by construction.
+
+    A ``fori_loop`` walks the worklist one vertex at a time and re-FirstFits
+    it against the *current* state — the canonical sequential-greedy choice,
+    which both guarantees zero conflicts on every edge incident to the
+    worklist (later vertices observe earlier updates) and sheds the inflated
+    colors speculation may have piled up before the engine bailed out: the
+    whole cascade tail costs ONE super-step.  ``row1_fn(v) -> (W,)`` is the
+    single-vertex row provider (``DeviceCSR.gather_row1``, a dense row, or a
+    composed two-hop row).
+
+    The worklist's colors are cleared up front, so each refit sees only the
+    colors of settled (non-worklist) vertices and of already-processed tail
+    entries — pure sequential greedy with the winners pinned.  Clearing also
+    makes self/duplicate lanes in composed two-hop rows trivially inert.
+    """
+    n = colors_ext.shape[0] - 1
+    colors_ext = colors_ext.at[wl].set(0)  # sentinel entries write slot n: 0
+
+    def body(i, colors_ext):
+        v = wl[i]
+        nc = colors_ext[row1_fn(v)]
+        ff = FF_FUNCS[kind](nc[None, :])[0]
+        new_c = jnp.where(v < n, ff, 0)
+        return colors_ext.at[v].set(new_c.astype(colors_ext.dtype))
+
+    return lax.fori_loop(0, wl.shape[0], body, colors_ext)
+
+
+def order_tail(wl, deg_ext):
+    """Canonical serial-tail order: degree-descending, ties id-ascending.
+
+    Largest-degree-first is the classic greedy quality ordering and matches
+    the engine's conflict heuristic; sentinels sort last.  One shared
+    device-side implementation so the host, fused, and batched drivers
+    produce the exact same sequence (bit-identical colors).
+    """
+    n = deg_ext.shape[0] - 1
+    ids = jnp.sort(wl)                       # id-ascending, sentinels last
+    key = jnp.where(ids < n, -deg_ext[ids], jnp.iinfo(jnp.int32).max)
+    return ids[jnp.argsort(key, stable=True)]
+
+
+def resolve_tail_threshold(tail_serial, n: int) -> tuple[bool, int]:
+    """(enabled, live-count threshold) from the ``tail_serial`` option.
+
+    ``"auto"`` picks a count below which one sequential pass beats the
+    expected remaining super-step dispatches; ``None``/``0`` disables both
+    the threshold and the stall detector (pure speculative, pre-§12
+    semantics); an int is an explicit threshold.
+    """
+    if tail_serial in (None, 0, False):
+        return False, 0
+    if tail_serial == "auto":
+        return True, int(min(1024, max(32, n // 64)))
+    return True, max(1, int(tail_serial))
+
+
+def _stalled(iters, total, prev) -> bool:
+    """Worklist stall: the last step retired < 1/STALL_DEN of the worklist.
+
+    ``iters >= 3`` skips the bootstrap step (everyone is uncolored, so the
+    first rotated step never shrinks the worklist by construction) AND the
+    first conflict wave (which retires only the conflict-component winners —
+    a large worklist regardless of topology).  From the third step on, a
+    near-unit shrink ratio is the signature of a cascading grid/circuit
+    graph whose frontier the serial tail crosses in one pass.
+    """
+    return (iters >= 3) & (total * STALL_DEN >= STALL_NUM * prev)
+
+
+# --------------------------------------------------------------------------
+# row providers (pytrees) + module-level jitted engine entry points
+# --------------------------------------------------------------------------
+
+class DenseRows:
+    """Dense padded-adjacency row provider (the ``padded`` engine layout).
+
+    ``rows``/``row1`` mirror the ``DeviceCSR`` provider protocol so the same
+    engine drivers run over either storage; ``width`` requests are ignored —
+    a dense table always gathers its full (Δmax) width, which is exactly the
+    bandwidth difference the engines A/B.
+    """
+
+    def __init__(self, adj, sentinel: int | None = None):
+        self.adj = adj
+        self.sentinel = int(adj.shape[0]) if sentinel is None else int(sentinel)
+
+    def rows(self, ids, width: int | None = None):
+        return gather_rows(self.adj, ids, self.sentinel)
+
+    def row1(self, v):
+        n = self.adj.shape[0]
+        r = self.adj[jnp.clip(v, 0, n - 1)]
+        return jnp.where(v < n, r, self.sentinel)
+
+
+jax.tree_util.register_pytree_node(
+    DenseRows,
+    lambda d: ((d.adj,), (d.sentinel,)),
+    lambda aux, ch: DenseRows(*ch, *aux),
+)
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def provider_tail(provider, colors_ext, wl, *, kind="bitset"):
+    """``serial_tail_step`` over a pytree row provider (cached compilation)."""
+    return serial_tail_step(provider.row1, colors_ext, wl, kind)
+
+
+def _tiled_superstep(provider, deg_ext, colors_ext, wls, *, widths, heuristic,
+                     kind, use_kernel, chunks, pack_degrees=False):
+    """One degree-tiled super-step: every class sub-step in one computation.
+
+    Classes gather at their own tile widths but all speculate against the
+    iteration-start snapshot (writes are disjoint), so the result is
+    bit-identical to a single full-width step over the union worklist.
+    """
+    snapshot = colors_ext
+    K = len(wls)
+    new_wls, counts = [], []
+    for k in range(K):
+        colors_ext, wl_k, cnt_k = ragged_superstep(
+            lambda ids, w=widths[k]: provider.rows(ids, w),
+            deg_ext, colors_ext, wls[k],
+            heuristic=heuristic, kind=kind, use_kernel=use_kernel,
+            coarsen=chunks[k],
+            colors_read=None if K == 1 else snapshot,
+            pack_degrees=pack_degrees,
+        )
+        new_wls.append(wl_k)
+        counts.append(cnt_k)
+    return colors_ext, tuple(new_wls), tuple(counts)
+
+
+provider_tiled_superstep = partial(
+    jax.jit, static_argnames=("widths", "heuristic", "kind", "use_kernel",
+                              "chunks", "pack_degrees")
+)(_tiled_superstep)
+
+
+# --------------------------------------------------------------------------
+# the ragged engine driver (degree-tiled dispatch + adaptive tail)
+# --------------------------------------------------------------------------
+
+def run_ragged_engine(
+    *,
+    n: int,
+    provider,
+    deg_ext,
+    classes: list,
+    tile_widths: list,
+    acc_widths: list,
+    tail_width: int,
+    mode: str = "workefficient",
+    heuristic: str = "degree",
+    kind: str = "bitset",
+    use_kernel: bool = False,
+    coarsen: int = 1,
+    coarsen_lanes: int | None = None,
+    tail_enabled: bool = True,
+    tail_threshold: int = 0,
+    max_iters: int,
+    algorithm: str = "data_driven_sgr",
+    pack_degrees: bool = False,
+) -> ColoringResult:
+    """Drive the rotated super-step to convergence over degree-tiled classes.
+
+    ``classes`` partitions the vertices (wide-first order); class ``k``'s
+    worklist gathers ``provider.rows(ids, tile_widths[k])`` tiles, and
+    ``padded_work`` charges ``lanes × acc_widths[k]`` gather cells.  When the
+    total live count drops to ``tail_threshold`` — or the worklist *stalls*
+    (a post-bootstrap step retires under 1/STALL_DEN of it, the signature of
+    a cascading grid/circuit graph) — the remaining entries are handed to ONE
+    ``serial_tail_step`` over the provider's full-width rows.  ``mode`` picks
+    the host-loop (``workefficient``) or single-device-program (``fused``)
+    realization of the *same* schedule — colors are bit-identical.
+    """
+    colors_ext = jnp.zeros((n + 1,), dtype=jnp.int32)
+    caps0 = [int(c.shape[0]) for c in classes]
+    # Bootstrap identity: with an unchunked worklist the first rotated step
+    # FirstFits every vertex against an all-zero tile — everyone takes color 1
+    # and the worklist is unchanged.  Materialize that constant instead of
+    # dispatching a full-width gather for it.
+    skip_bootstrap = coarsen <= 1 and (
+        coarsen_lanes is None or coarsen_lanes >= max(caps0, default=1))
+    boot_iters = 0
+    if skip_bootstrap and max_iters >= 1:
+        colors_ext = jnp.where(
+            jnp.arange(n + 1, dtype=jnp.int32) < n, 1, 0
+        ).astype(jnp.int32)
+        boot_iters = 1
+
+    if mode == "fused":
+        return _run_ragged_fused(
+            n, provider, deg_ext, classes, tile_widths, acc_widths,
+            tail_width, colors_ext, boot_iters, heuristic, kind, use_kernel,
+            coarsen, coarsen_lanes, tail_enabled, tail_threshold, max_iters,
+            algorithm, pack_degrees,
+        )
+    if mode != "workefficient":
+        raise ValueError(f"unknown mode {mode!r}")
+
+    K = len(classes)
+    caps = caps0
+    wls = [jnp.asarray(c) for c in classes]
+    counts = list(caps)
+    iters = boot_iters
+    work = n if boot_iters else 0
+    padded = 0
+    total = sum(counts)
+    prev = total
+    stalled = False
+    while total > 0 and iters < max_iters:
+        if tail_enabled and total <= tail_threshold:
+            break
+        if tail_enabled and _stalled(iters, total, prev):
+            stalled = True
+            break
+        prev = total
+        sliced, chunk_l = [], []
+        for k in range(K):
+            cap = min(next_pow2(max(counts[k], 1)), caps[k])
+            sliced.append(wls[k][:cap])
+            chunk_l.append(max(1, math.ceil(cap / coarsen_lanes))
+                           if coarsen_lanes else coarsen)
+            work += counts[k]
+            if counts[k]:
+                padded += cap * acc_widths[k]
+        colors_ext, new_wls, cnts = provider_tiled_superstep(
+            provider, deg_ext, colors_ext, tuple(sliced),
+            widths=tuple(tile_widths), heuristic=heuristic, kind=kind,
+            use_kernel=use_kernel, chunks=tuple(chunk_l),
+            pack_degrees=pack_degrees,
+        )
+        wls = list(new_wls)
+        counts = [int(c) for c in cnts]
+        iters += 1
+        total = sum(counts)
+    converged = total == 0
+    if total > 0 and iters < max_iters and tail_enabled:
+        if stalled:
+            # speculation failed to make progress — discard it and run one
+            # clean largest-degree-first sequential greedy over the graph
+            tail_np = np.arange(n, dtype=np.int32)
+        else:
+            live = np.concatenate(
+                [np.asarray(wls[k][:counts[k]]) for k in range(K) if counts[k]]
+            )
+            tail_np = np.full(min(next_pow2(total), n), n, np.int32)
+            tail_np[:total] = live
+        tail_wl = order_tail(jnp.asarray(tail_np), deg_ext)
+        colors_ext = provider_tail(provider, colors_ext, tail_wl, kind=kind)
+        work += n if stalled else total
+        padded += int(tail_wl.shape[0]) * tail_width
+        iters += 1
+        converged = True
+    return ColoringResult(
+        np.asarray(colors_ext[:n]), iters, work, padded, converged,
+        algorithm=algorithm,
+    )
+
+
+@partial(jax.jit, static_argnames=("tile_widths", "heuristic", "kind",
+                                   "use_kernel", "chunks", "tail_enabled",
+                                   "max_iters", "boot_iters", "pack_degrees"))
+def _fused_spec_loop(provider, deg_ext, colors_ext, wls, counts, thr, *,
+                     tile_widths, heuristic, kind, use_kernel, chunks,
+                     tail_enabled, max_iters, boot_iters=0,
+                     pack_degrees=False):
+    """The speculative phase as one ``lax.while_loop`` device program."""
+    n = colors_ext.shape[0] - 1
+    K = len(wls)
+
+    def total_of(counts):
+        return sum(counts, jnp.int32(0))
+
+    def cond(state):
+        _, _, counts, it, _, prev = state
+        total = total_of(counts)
+        go = (total > 0) & (it < max_iters)
+        if tail_enabled:
+            go &= (total > thr) & ~_stalled(it, total, prev)
+        return go
+
+    def body(state):
+        colors_ext, wls, counts, it, work, _ = state
+        prev = total_of(counts)
+        colors_ext, new_wls, new_counts = _tiled_superstep(
+            provider, deg_ext, colors_ext, wls,
+            widths=tile_widths, heuristic=heuristic, kind=kind,
+            use_kernel=use_kernel, chunks=chunks, pack_degrees=pack_degrees,
+        )
+        total = total_of(new_counts)
+        return (colors_ext, new_wls, new_counts, it + 1, work + total, prev)
+
+    state = (colors_ext, wls, counts, jnp.int32(boot_iters), jnp.int32(0),
+             jnp.int32(n))
+    return lax.while_loop(cond, body, state)
+
+
+def _run_ragged_fused(
+    n, provider, deg_ext, classes, tile_widths, acc_widths, tail_width,
+    colors_ext, boot_iters, heuristic, kind, use_kernel, coarsen,
+    coarsen_lanes, tail_enabled, tail_threshold, max_iters, algorithm,
+    pack_degrees=False,
+):
+    K = len(classes)
+    caps = [int(c.shape[0]) for c in classes]
+    chunks = [coarsen] * K
+    if coarsen_lanes:
+        chunks = [max(1, math.ceil(c / coarsen_lanes)) for c in caps]
+    wls0 = tuple(jnp.asarray(c) for c in classes)
+    counts0 = tuple(jnp.int32(c) for c in caps)
+    colors_ext, wls, counts, it, work, prev = _fused_spec_loop(
+        provider, deg_ext, colors_ext, wls0, counts0,
+        jnp.int32(tail_threshold),
+        tile_widths=tuple(tile_widths), heuristic=heuristic, kind=kind,
+        use_kernel=use_kernel, chunks=tuple(chunks),
+        tail_enabled=tail_enabled, max_iters=max_iters,
+        boot_iters=boot_iters, pack_degrees=pack_degrees,
+    )
+    total = int(sum(int(c) for c in counts))
+    iters = int(it)
+    work_items = int(work) + n
+    padded = (iters - boot_iters) * sum(c * w for c, w in zip(caps, acc_widths))
+    converged = total == 0
+    if total > 0 and iters < max_iters and tail_enabled:
+        stalled = total > tail_threshold and bool(
+            _stalled(iters, total, int(prev)))
+        if stalled:
+            tail_wl = order_tail(jnp.arange(n, dtype=jnp.int32), deg_ext)
+        else:
+            combined = jnp.concatenate(list(wls)) if K > 1 else wls[0]
+            tail_wl = order_tail(combined, deg_ext)
+        colors_ext = provider_tail(provider, colors_ext, tail_wl, kind=kind)
+        work_items += n if stalled else total
+        padded += int(tail_wl.shape[0]) * tail_width
+        iters += 1
+        converged = True
+    return ColoringResult(
+        np.asarray(colors_ext[:n]), iters, work_items, padded, converged,
+        algorithm=algorithm,
+    )
+
+
+# --------------------------------------------------------------------------
+# generic drivers for the classic step (shared with topo.py / repro.d2)
 # --------------------------------------------------------------------------
 # The two driver loops are generic over the super-step: ``step(colors_ext,
-# wl) -> (colors_ext, wl, count)``.  ``color_data_driven`` instantiates them
-# with ``sgr_step``; the distance-2 engine (repro.d2) reuses them with its
-# two-hop super-step instead of copying the scaffolding.
+# wl) -> (colors_ext, wl, count)``.  The classic engine instantiates them
+# with ``sgr_step``; legacy distance-2 callers reuse them with the two-hop
+# super-step instead of copying the scaffolding.
 
 def run_fused_loop(step, colors_ext, wl0, count0, max_iters: int):
     """The whole coloring as ONE jitted ``lax.while_loop`` device program.
@@ -213,20 +679,20 @@ def run_fused_loop(step, colors_ext, wl0, count0, max_iters: int):
     return run(colors_ext, wl0, jnp.int32(count0))
 
 
-def fused_result(colors_ext, n: int, count, it, work,
+def fused_result(colors_ext, n: int, count, it, work, width: int = 1,
                  algorithm: str = "data_driven_sgr") -> ColoringResult:
     """Shared result assembly for fused drivers (paper work accounting).
 
     Every super-step dispatches full capacity, so ``padded_work`` is
-    ``iters * n`` and the first step's n live items are charged on top of
-    the post-step counts accumulated in ``work``.
+    ``iters * n * width`` gather cells and the first step's n live items are
+    charged on top of the post-step counts accumulated in ``work``.
     """
     iters = int(it)
     return ColoringResult(
         np.asarray(colors_ext[:n]),
         iters,
         int(work) + n,
-        iters * n,
+        iters * n * width,
         converged=int(count) == 0,
         algorithm=algorithm,
     )
@@ -236,8 +702,9 @@ def run_workefficient_loop(step, colors_ext, wl0, count0: int, max_iters: int):
     """Host loop re-slicing the worklist to the next pow2 of the live count.
 
     Single-class variant of the paper's work-efficiency argument (the
-    bucketed multi-class loop lives in ``color_data_driven``).  Returns
-    ``(colors_ext, iters, work, padded, converged)``.
+    class-tiled loop lives in ``run_ragged_engine``).  Returns
+    ``(colors_ext, iters, work, padded, converged)``; ``padded`` counts
+    dispatched lanes (multiply by the tile width for gather cells).
     """
     wl, count = wl0, int(count0)
     iters = work = padded = 0
@@ -274,6 +741,63 @@ def _prepare(g: CSRGraph, buckets):
     return adjs, deg_ext, classes
 
 
+def _resolve_classes(degrees: np.ndarray, buckets, tiling):
+    """(classes, widths) for the degree-tiled dispatch, wide-first order.
+
+    Explicit ``buckets`` win; otherwise ``tiling`` is ``"auto"`` (log-spaced
+    thresholds from the degree histogram), an explicit threshold tuple, or
+    ``None``/``()`` for a single full-width class.  Takes the raw degree
+    histogram of the GATHERED side (the original graph's, G²'s, or a
+    conflict graph's — shared with ``repro.d2``); degree-0 vertices join the
+    narrowest class, empty classes are dropped.
+    """
+    degrees = np.asarray(degrees)
+    n = int(degrees.size)
+    dmax = max(int(degrees.max(initial=0)), 1)
+    if buckets:
+        thresholds = tuple(buckets)
+    elif tiling == "auto":
+        thresholds = auto_tile_thresholds(degrees)
+    elif not tiling:
+        thresholds = ()
+    else:
+        thresholds = tuple(tiling)
+    if not thresholds:
+        return [np.arange(n, dtype=np.int32)], [dmax]
+    bounds = list(thresholds) + [dmax]
+    widths = [min(max(b, 1), dmax) for b in bounds]
+    classes, lo = [], 0
+    for hi in bounds:
+        classes.append(
+            np.where((degrees > lo) & (degrees <= hi))[0].astype(np.int32))
+        lo = hi
+    zero = np.where(degrees == 0)[0].astype(np.int32)
+    if zero.size:  # degree-0 vertices take color 1 trivially: narrowest class
+        classes[0] = np.concatenate([zero, classes[0]])
+    order = np.argsort([-w for w in widths], kind="stable")
+    pairs = [(classes[i], widths[i]) for i in order if classes[i].size]
+    if not pairs:
+        return [np.arange(n, dtype=np.int32)], [dmax]
+    return [p[0] for p in pairs], [p[1] for p in pairs]
+
+
+def _graph_device_cache(g, key: str, build):
+    """Memoize device-side views on the (frozen) host graph object.
+
+    CSRGraph is immutable, so its device transfers (CSR arrays, dense
+    adjacency, extended degrees) are pure functions of the object — cache
+    them on the instance so repeated ``color()`` calls skip the host→device
+    uploads.  ``object.__setattr__`` bypasses the frozen-dataclass guard.
+    """
+    cache = getattr(g, "_device_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(g, "_device_cache", cache)
+    if key not in cache:
+        cache[key] = build()
+    return cache[key]
+
+
 @register("data_driven")
 def color_data_driven(
     g: CSRGraph,
@@ -288,31 +812,95 @@ def color_data_driven(
     mode: str = "workefficient",
     max_iters: int | None = None,
     reuse_rows: bool = False,
+    engine: str = "ragged",
+    tiling="auto",
+    tail_serial="auto",
 ) -> ColoringResult:
     """Color ``g`` with the paper's optimized data-driven SGR algorithm.
 
+    ``engine`` picks the execution engine (see the module docstring):
+    ``ragged`` (CSR-native rotated super-step, the default), ``padded``
+    (same schedule over the dense padded-adjacency table — bit-identical
+    colors), or ``classic`` (the two-phase baseline).  ``tiling`` controls
+    the degree-tiled dispatch (``"auto"``, explicit thresholds, or ``None``)
+    and ``tail_serial`` the adaptive tail-serialization (``"auto"``, an
+    explicit live-count threshold, or ``None`` to disable).
+
     ``coarsen_lanes`` models the paper's thread-coarsening launch config
-    (nSM x max_blocks x 128 threads): the FirstFit phase is chunked so at most
-    ``coarsen_lanes`` vertices speculate concurrently; later chunks observe
-    earlier chunks' colors, exactly like CUDA blocks scheduled in waves.
-    Overrides ``coarsen_ff`` when set.
+    (nSM x max_blocks x 128 threads): the speculative phase is chunked so at
+    most ``coarsen_lanes`` vertices speculate concurrently; later chunks
+    observe earlier chunks' colors, exactly like CUDA blocks scheduled in
+    waves.  Overrides ``coarsen_ff`` when set.
     """
     n = g.n
     if n == 0:
         return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True)
     max_iters = max_iters or n + 1
+    if engine == "classic":
+        return _color_classic(
+            g, heuristic, firstfit, use_kernel, coarsen_ff, coarsen_cr,
+            coarsen_lanes, buckets, mode, max_iters, reuse_rows,
+        )
+    if engine not in ("ragged", "padded"):
+        raise ValueError(
+            f"unknown engine {engine!r}; options: ragged, padded, classic"
+        )
+
+    classes, widths = _resolve_classes(g.degrees, buckets, tiling)
+    dmax = max(g.max_degree, 1)
+    deg_ext = _graph_device_cache(g, "deg_ext", lambda: jnp.asarray(
+        np.concatenate([g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
+    ))
+    if engine == "ragged":
+        provider = _graph_device_cache(g, "dcsr", lambda: DeviceCSR.from_csr(g))
+        tile_widths = widths
+        acc_widths = widths
+    else:
+        provider = _graph_device_cache(g, "dense", lambda: DenseRows(
+            jnp.asarray(g.padded_adjacency())))
+        tile_widths = [None] * len(widths)
+        acc_widths = [dmax] * len(widths)
+    tail_enabled, thr = resolve_tail_threshold(tail_serial, n)
+    return run_ragged_engine(
+        n=n,
+        provider=provider,
+        deg_ext=deg_ext,
+        classes=classes,
+        tile_widths=tile_widths,
+        acc_widths=acc_widths,
+        tail_width=dmax,
+        mode=mode,
+        heuristic=heuristic,
+        kind=firstfit,
+        use_kernel=use_kernel,
+        coarsen=max(int(coarsen_ff), int(coarsen_cr)),
+        coarsen_lanes=coarsen_lanes,
+        tail_enabled=tail_enabled,
+        tail_threshold=thr,
+        max_iters=max_iters,
+        pack_degrees=dmax < 2**15 - 1,
+    )
+
+
+def _color_classic(
+    g, heuristic, firstfit, use_kernel, coarsen_ff, coarsen_cr,
+    coarsen_lanes, buckets, mode, max_iters, reuse_rows,
+):
+    """The pre-§12 two-phase engine (FirstFit kernel + ConflictResolve kernel)."""
+    n = g.n
     adjs, deg_ext, classes = _prepare(g, buckets)
     colors_ext = jnp.zeros((n + 1,), dtype=jnp.int32)
 
     if mode == "fused":
-        assert not buckets, "fused mode runs single-class (full-width) only"
+        assert not buckets, "classic fused mode runs single-class (full-width) only"
         return _run_fused(
             g, adjs[0], deg_ext, colors_ext, heuristic, firstfit, coarsen_ff,
-            coarsen_cr, use_kernel, max_iters,
+            coarsen_cr, use_kernel, max_iters, reuse_rows,
         )
     if mode != "workefficient":
         raise ValueError(f"unknown mode {mode!r}")
 
+    widths = [int(a.shape[1]) for a in adjs]
     # per-class worklists (class membership is static: degrees never change)
     wls = [jnp.asarray(ids) for ids in classes]
     counts = [int(ids.shape[0]) for ids in classes]
@@ -340,7 +928,7 @@ def color_data_driven(
                 reuse_rows=reuse_rows,
             )
             work += count
-            padded += cap
+            padded += cap * widths[k]
             new_wls.append(wl_out)
             new_counts.append(int(cnt))
         wls, counts = new_wls, new_counts
@@ -359,7 +947,7 @@ def color_fused(g: CSRGraph, **opts) -> ColoringResult:
 
 def _run_fused(
     g, adj, deg_ext, colors_ext, heuristic, kind, coarsen_ff, coarsen_cr,
-    use_kernel, max_iters,
+    use_kernel, max_iters, reuse_rows=False,
 ):
     n = g.n
     step = partial(
@@ -371,9 +959,10 @@ def _run_fused(
         coarsen_ff=coarsen_ff,
         coarsen_cr=coarsen_cr,
         use_kernel=use_kernel,
+        reuse_rows=reuse_rows,
     )
     wl0 = jnp.arange(n, dtype=jnp.int32)
     colors_ext, _, count, it, work = run_fused_loop(
         step, colors_ext, wl0, n, max_iters
     )
-    return fused_result(colors_ext, n, count, it, work)
+    return fused_result(colors_ext, n, count, it, work, width=int(adj.shape[1]))

@@ -25,7 +25,9 @@ import numpy as np
 
 __all__ = [
     "CSRGraph",
+    "DeviceCSR",
     "DeviceGraph",
+    "auto_tile_thresholds",
     "csr_from_edges",
     "compose_pairs",
     "padded_ragged",
@@ -245,6 +247,130 @@ def compose_pairs(
     within = np.arange(total, dtype=np.int64) - np.repeat(ends - lens, lens)
     w = col_indices_b[starts + within].astype(np.int64)
     return v, w
+
+
+def auto_tile_thresholds(
+    degrees: np.ndarray,
+    *,
+    min_width: int = 8,
+    min_class_frac: float = 0.05,
+    max_classes: int = 6,
+) -> tuple[int, ...]:
+    """Log-spaced degree-class thresholds derived from the degree histogram.
+
+    Generalizes the hand-tuned two-bucket ``buckets=(16, 128)`` Merrill-style
+    load balancing into an automatic tiling: candidate bounds double from
+    ``min_width`` up to the max degree, and a bound survives only if the
+    degree class it closes holds at least ``min_class_frac`` of the vertices
+    (smaller classes are merged into the next wider tile — per-class dispatch
+    has a fixed cost that a handful of vertices cannot amortize).  Returns
+    ``()`` — a single full-width class — when tiling cannot pay for itself:
+    tiny graphs, or histograms so flat that every vertex needs (close to) the
+    max-degree tile anyway.
+    """
+    degrees = np.asarray(degrees)
+    n = int(degrees.size)
+    dmax = int(degrees.max(initial=0))
+    # tiling is a bandwidth play: below a few thousand vertices the whole
+    # adjacency fits in cache and the extra per-class dispatches dominate
+    if n < 2048 or dmax <= 2 * min_width:
+        return ()
+    out: list[int] = []
+    lo = 0
+    t = min_width
+    while t < dmax and len(out) < max_classes:
+        if int(((degrees > lo) & (degrees <= t)).sum()) >= min_class_frac * n:
+            out.append(t)
+            lo = t
+        t *= 2
+    return tuple(out)
+
+
+class DeviceCSR:
+    """Device-resident CSR graph — the ragged engine's native storage.
+
+    Unlike ``DeviceGraph`` (a dense ``(n, Dmax)`` padded table), this keeps
+    the paper's actual R/C arrays on device — O(m) memory — and serves
+    neighbor *tiles* of any requested width straight from them:
+
+    ``row_starts``  (n+1,) int32 — CSR offsets (R)
+    ``col_padded``  (m + pad,) int32 — CSR column ids (C) with ``pad`` extra
+                    sentinel slots so a full-width dynamic slice starting at
+                    the last row never reads out of bounds
+    ``deg_ext``     (n+1,) int32 — degrees with a 0 sentinel slot
+
+    ``gather_rows(ids, width)`` materializes only the ``(w, width)`` tile a
+    worklist class actually needs; lanes past each row's degree (and whole
+    rows for sentinel ids) read as the sentinel ``n``, which is inert through
+    the extended color array (``colors_ext[n] == 0``, §2).
+    """
+
+    def __init__(self, row_starts, col_padded, deg_ext, n: int, max_width: int):
+        self.row_starts = row_starts
+        self.col_padded = col_padded
+        self.deg_ext = deg_ext
+        self.n = int(n)
+        self.max_width = int(max_width)  # widest legal gather (>= max degree)
+
+    @classmethod
+    def from_csr(cls, g: "CSRGraph") -> "DeviceCSR":
+        import jax.numpy as jnp
+
+        n = g.n
+        w = max(g.max_degree, 1)
+        col = np.concatenate(
+            [g.col_indices.astype(np.int32), np.full(w, n, np.int32)]
+        )
+        deg = np.concatenate([g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
+        return cls(
+            jnp.asarray(g.row_offsets.astype(np.int32)),
+            jnp.asarray(col),
+            jnp.asarray(deg),
+            n,
+            w,
+        )
+
+    # provider protocol (core.coloring run_ragged_engine): rows / row1
+    def rows(self, ids, width: int | None = None):
+        return self.gather_rows(ids, self.max_width if width is None else width)
+
+    def row1(self, v):
+        return self.gather_row1(v)
+
+    def gather_rows(self, ids, width: int):
+        """Ragged ``(w, width)`` neighbor-id tile for worklist ``ids``.
+
+        ``width`` must cover every gathered vertex's degree (class callers
+        size it from their degree bound) — narrower widths would silently
+        truncate adjacency, exactly what ``padded_adjacency`` refuses to do.
+        """
+        import jax.numpy as jnp
+
+        n = self.n
+        safe = jnp.clip(ids, 0, max(n - 1, 0))
+        starts = self.row_starts[safe]
+        deg = self.deg_ext[safe]
+        lane = jnp.arange(width, dtype=starts.dtype)[None, :]
+        rows = self.col_padded[starts[:, None] + lane]
+        valid = (lane < deg[:, None]) & (ids < n)[:, None]
+        return jnp.where(valid, rows, n)
+
+    def gather_row1(self, v, width: int | None = None):
+        """One vertex's sentinel-padded neighbor row (traced scalar ``v``).
+
+        The serial-tail primitive: a ``(width,)`` dynamic slice of C starting
+        at R[v] — O(width) work per vertex, no dense adjacency anywhere.
+        """
+        import jax.numpy as jnp
+        from jax import lax
+
+        width = self.max_width if width is None else int(width)
+        n = self.n
+        start = self.row_starts[jnp.clip(v, 0, max(n - 1, 0))]
+        vals = lax.dynamic_slice(self.col_padded, (start,), (width,))
+        lane = jnp.arange(width, dtype=start.dtype)
+        deg = self.deg_ext[jnp.clip(v, 0, n)]
+        return jnp.where((lane < deg) & (v < n), vals, n)
 
 
 class DeviceGraph:

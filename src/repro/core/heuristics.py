@@ -18,12 +18,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["conflict_lose_flags", "HEURISTICS"]
+__all__ = ["conflict_lose_flags", "conflict_lose_lanes", "HEURISTICS"]
 
 HEURISTICS = ("id", "degree")
 
 
-def conflict_lose_flags(
+def conflict_lose_lanes(
     ids: jax.Array,          # (w,)   worklist vertex ids (sentinel n allowed)
     neigh_ids: jax.Array,    # (w, W) padded neighbor ids (sentinel n in pads)
     my_colors: jax.Array,    # (w,)   colors of ids (0 for sentinel)
@@ -31,8 +31,15 @@ def conflict_lose_flags(
     my_deg: jax.Array,       # (w,)
     neigh_deg: jax.Array,    # (w, W)
     heuristic: str,
-) -> jax.Array:
-    """True where the worklist vertex loses a conflict and must recolor."""
+) -> tuple[jax.Array, jax.Array]:
+    """Per-lane conflict masks ``(same, lose_lane)``.
+
+    ``same`` marks lanes whose neighbor shares my (nonzero) color;
+    ``lose_lane`` the subset whose neighbor *beats* me under the loser rule.
+    Because the rule is a strict total order, ``same & ~lose_lane`` lanes are
+    neighbors **I** beat — provably losers this step — which the rotated
+    super-step treats as already-cleared when it refits (DESIGN.md §12).
+    """
     same = (neigh_colors == my_colors[:, None]) & (my_colors[:, None] > 0)
     if heuristic == "id":
         lose_lane = same & (ids[:, None] < neigh_ids)
@@ -43,4 +50,20 @@ def conflict_lose_flags(
         )
     else:
         raise ValueError(f"unknown heuristic {heuristic!r}; options: {HEURISTICS}")
+    return same, lose_lane
+
+
+def conflict_lose_flags(
+    ids: jax.Array,
+    neigh_ids: jax.Array,
+    my_colors: jax.Array,
+    neigh_colors: jax.Array,
+    my_deg: jax.Array,
+    neigh_deg: jax.Array,
+    heuristic: str,
+) -> jax.Array:
+    """True where the worklist vertex loses a conflict and must recolor."""
+    _, lose_lane = conflict_lose_lanes(
+        ids, neigh_ids, my_colors, neigh_colors, my_deg, neigh_deg, heuristic
+    )
     return jnp.any(lose_lane, axis=1)

@@ -25,19 +25,19 @@ entry point.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api import register
-from repro.core.coloring import ColoringResult, sgr_step
-from repro.core.csr import CSRGraph, compose_pairs, csr_from_edges, padded_ragged
+from repro.core.coloring import ColoringResult
+from repro.core.csr import (CSRGraph, DeviceCSR, compose_pairs,
+                            csr_from_edges, padded_ragged)
 from repro.d2.coloring import (
     DEFAULT_D2_BUDGET,
-    d2_sgr_step,
-    drive,
+    TwoHopRows,
     resolve_strategy,
+    run_d2_engine,
 )
 
 __all__ = [
@@ -157,11 +157,17 @@ def color_bipartite(
     memory_budget: int = DEFAULT_D2_BUDGET,
     coarsen: int = 1,
     max_iters: int | None = None,
+    tiling="auto",
+    tail_serial="auto",
 ) -> ColoringResult:
     """Partial coloring of ``bg``'s column side with the SGR super-step.
 
     ``result.colors[c]`` is the group of column ``c``; validity means no two
-    columns sharing a row share a color (``d2.validate_bipartite``).
+    columns sharing a row share a color (``d2.validate_bipartite``).  Runs
+    on the rotated ragged engine (§12): the precomputed strategy colors the
+    column-conflict graph's CSR, the on-the-fly strategy composes the
+    cols→rows→cols gathers per super-step; both inherit degree-tiled
+    dispatch (precomputed) and adaptive tail-serialization.
     """
     nc = bg.n_cols
     if nc == 0:
@@ -177,19 +183,22 @@ def color_bipartite(
     strategy = resolve_strategy(strategy, est_bytes, memory_budget)
 
     if strategy == "precomputed":
-        adj = jnp.asarray(bg.column_conflict_graph().padded_adjacency())
-        step = partial(
-            sgr_step, adj, deg_ext,
-            heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
-        )
+        cg = bg.column_conflict_graph()
+        provider = DeviceCSR.from_csr(cg)
+        degrees_for_tiling = cg.degrees
     else:
         cols2rows, rows2cols = bg.padded_halves()
-        step = partial(
-            d2_sgr_step, jnp.asarray(cols2rows), jnp.asarray(rows2cols), deg_ext,
-            heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
-            include_first_hop=False, coarsen=coarsen,
-        )
-    return drive(step, nc, mode, max_iters, algorithm="bipartite_partial_sgr")
+        provider = TwoHopRows(jnp.asarray(cols2rows), jnp.asarray(rows2cols),
+                              include_first_hop=False)
+        degrees_for_tiling = None
+    return run_d2_engine(
+        n=nc, provider=provider, deg_ext=deg_ext, tiling=tiling,
+        degrees_for_tiling=degrees_for_tiling, mode=mode, heuristic=heuristic,
+        kind=firstfit, use_kernel=use_kernel, coarsen=coarsen,
+        tail_serial=tail_serial, max_iters=max_iters,
+        algorithm="bipartite_partial_sgr",
+        deg_bound=int(bg.col_degrees.max(initial=0)),
+    )
 
 
 # --------------------------------------------------------------------------

@@ -6,26 +6,26 @@ That equivalence is the backbone of this module; two execution strategies
 share one quality contract:
 
 * ``precomputed`` — build G² host-side (``CSRGraph.square``) and run the
-  UNCHANGED distance-1 super-step (``core.coloring.sgr_step``) over its
-  padded adjacency.  One gather per phase, exactly the §2 layout; this is
-  also what the batched engine packs (``core/batch.py``), so batched D2 is
-  bit-identical to per-graph fused D2 for free.
+  UNCHANGED distance-1 ragged engine (``core.coloring.run_ragged_engine``)
+  over its CSR — the same rotated super-step, degree-tiled dispatch, and
+  adaptive tail-serialization as distance-1 (§12).  This is also what the
+  batched engine packs (``core/batch.py``), so batched D2 is bit-identical
+  to per-graph fused D2 for free.
 * ``onthefly`` — when the ``(n, W2)`` square view would blow the memory
   budget, compose TWO sentinel-padded gathers through ``colors_ext`` per
-  super-step instead (``d2_sgr_step``): sentinel ids yield all-sentinel
-  rows in hop 1, which yield all-sentinel rows again in hop 2, so padding
-  stays inert through both hops — the D2 analogue of the §2 trick.  The
+  super-step instead (``TwoHopRows``): sentinel ids yield all-sentinel rows
+  in hop 1, which yield all-sentinel rows again in hop 2, so padding stays
+  inert through both hops — the D2 analogue of the §2 trick.  The
   ``coarsen`` knob chunks the worklist to bound the ``(w, W + W²)``
   transient, mirroring D1 thread coarsening.
 
 Both strategies order conflict losers by the ORIGINAL graph's degree (ties
-by id) — not G²'s — so with ``coarsen=1`` they produce bit-identical
-colorings (tested), and the choice is purely a memory/performance policy.
-
-Self-visits need no masking: a vertex reaches itself through any two-hop
-round trip ``v → u → v``, but at FirstFit time a worklist vertex's own
-color is always 0 (uncolored/cleared), and both conflict loser rules are
-strict total orders, so the self lane is inert in both phases.
+by id) — not G²'s — and the rotated super-step is insensitive to duplicate
+or self lanes (duplicates cannot change a forbidden set or an any-reduce;
+the self lane never beats its owner under either strict total order, and
+the serial tail masks it explicitly), so with ``coarsen=1`` the two
+strategies produce bit-identical colorings (tested) and the choice is
+purely a memory/performance policy.
 """
 from __future__ import annotations
 
@@ -39,18 +39,17 @@ from repro.api import register
 from repro.core.coloring import (
     ColoringResult,
     _chunk_bounds,
+    _resolve_classes,
     compact,
     cr_flags,
     ff_apply,
-    fused_result,
     gather_rows,
-    run_fused_loop,
-    run_workefficient_loop,
-    sgr_step,
+    resolve_tail_threshold,
+    run_ragged_engine,
 )
-from repro.core.csr import CSRGraph
+from repro.core.csr import CSRGraph, DeviceCSR
 
-__all__ = ["color_distance2", "d2_sgr_step", "DEFAULT_D2_BUDGET"]
+__all__ = ["color_distance2", "d2_sgr_step", "TwoHopRows", "DEFAULT_D2_BUDGET"]
 
 # bytes the precomputed strategy may spend on the (n, W2) square view plus
 # the transient two-hop pair expansion; past this, auto falls back to
@@ -58,8 +57,48 @@ __all__ = ["color_distance2", "d2_sgr_step", "DEFAULT_D2_BUDGET"]
 DEFAULT_D2_BUDGET = 256 * 2**20
 
 
+class TwoHopRows:
+    """Composed two-hop row provider: ``ids → adj_a → adj_b`` (§11 + §12).
+
+    For distance-2 on one graph, ``adj_a is adj_b`` and hop-1 neighbors are
+    part of the neighborhood (``include_first_hop=True``); for bipartite
+    partial coloring, ``adj_a`` is cols→rows, ``adj_b`` rows→cols, and only
+    hop-2 (column-side) ids carry colors.  Tiles may contain duplicate and
+    self lanes — harmless to the rotated super-step (see module docstring).
+    """
+
+    def __init__(self, adj_a, adj_b, include_first_hop: bool = True):
+        self.adj_a = adj_a
+        self.adj_b = adj_b
+        self.include_first_hop = bool(include_first_hop)
+
+    @property
+    def width(self) -> int:
+        w1, w2 = int(self.adj_a.shape[1]), int(self.adj_b.shape[1])
+        return w1 * w2 + (w1 if self.include_first_hop else 0)
+
+    def rows(self, ids, width: int | None = None):
+        n = self.adj_a.shape[0]               # colored side
+        rows1 = gather_rows(self.adj_a, ids, sentinel=self.adj_b.shape[0])
+        rows2 = gather_rows(self.adj_b, rows1.reshape(-1), sentinel=n)
+        rows2 = rows2.reshape(ids.shape[0], -1)
+        if self.include_first_hop:
+            return jnp.concatenate([rows1, rows2], axis=1)
+        return rows2
+
+    def row1(self, v):
+        return self.rows(v[None])[0]
+
+
+jax.tree_util.register_pytree_node(
+    TwoHopRows,
+    lambda t: ((t.adj_a, t.adj_b), (t.include_first_hop,)),
+    lambda aux, ch: TwoHopRows(*ch, *aux),
+)
+
+
 # --------------------------------------------------------------------------
-# the two-hop super-step (shared with bipartite.py)
+# the classic two-hop super-step (kept as the paper-faithful baseline)
 # --------------------------------------------------------------------------
 
 @partial(
@@ -80,16 +119,11 @@ def d2_sgr_step(
     include_first_hop: bool = True,
     coarsen: int = 1,
 ):
-    """One D2 super-step: FirstFit → ConflictResolve(+clear) → compaction.
+    """One classic D2 super-step: FirstFit → ConflictResolve → compaction.
 
-    The forbidden/conflict neighborhood of worklist vertex ``v`` is composed
-    per step from two gathers: ``rows1 = adj_a[v]`` then ``rows2 =
-    adj_b[rows1]``.  For distance-2 on one graph, ``adj_a is adj_b`` and
-    hop-1 neighbors are part of the neighborhood (``include_first_hop``);
-    for bipartite partial coloring, ``adj_a`` is cols→rows, ``adj_b`` is
-    rows→cols, and only hop-2 (column-side) ids carry colors.  All phase
-    helpers are the distance-1 ones from ``core.coloring`` — only the row
-    provider changed.
+    The two-phase (pre-§12) formulation, retained for A/B comparison and
+    for the two-tile ``kernels/d2`` bitset kernel.  The production engine
+    routes through ``TwoHopRows`` + the rotated super-step instead.
     """
     n = colors_ext.shape[0] - 1  # colored-side vertex count (sentinel slot)
     cap = wl.shape[0]
@@ -141,30 +175,45 @@ def d2_sgr_step(
 
 
 # --------------------------------------------------------------------------
-# drivers (shared with bipartite.py)
+# engine plumbing (shared with bipartite.py)
 # --------------------------------------------------------------------------
 
-def drive(step, n: int, mode: str, max_iters: int, algorithm: str) -> ColoringResult:
-    """Run ``step`` to convergence under the requested execution mode.
+def run_d2_engine(
+    *, n, provider, deg_ext, tiling, degrees_for_tiling, mode, heuristic,
+    kind, use_kernel, coarsen, tail_serial, max_iters, algorithm,
+    deg_bound: int = 2**15,
+) -> ColoringResult:
+    """Drive the rotated engine over a D2 row provider (shared w/ bipartite).
 
-    Reuses the generic loops refactored out of ``core.coloring``; the work
-    accounting mirrors the distance-1 drivers exactly.
+    ``degrees_for_tiling`` (the gathered-side degree histogram, e.g. G²'s)
+    sizes the degree-tiled dispatch when the provider honors widths
+    (``DeviceCSR``); composed providers gather their full two-hop width and
+    pass ``None``.
     """
-    colors_ext = jnp.zeros((n + 1,), dtype=jnp.int32)
-    wl0 = jnp.arange(n, dtype=jnp.int32)
-    if mode == "fused":
-        colors_ext, _, count, it, work = run_fused_loop(
-            step, colors_ext, wl0, n, max_iters
-        )
-        return fused_result(colors_ext, n, count, it, work, algorithm)
-    if mode != "workefficient":
-        raise ValueError(f"unknown mode {mode!r}")
-    colors_ext, iters, work, padded, converged = run_workefficient_loop(
-        step, colors_ext, wl0, n, max_iters
-    )
-    return ColoringResult(
-        np.asarray(colors_ext[:n]), iters, work, padded, converged,
-        algorithm=algorithm,
+    if degrees_for_tiling is not None:
+        classes, tile_widths = _resolve_classes(degrees_for_tiling, (), tiling)
+        acc_widths = tile_widths
+        tail_width = max(int(np.asarray(degrees_for_tiling).max(initial=0)), 1)
+        if len(classes) == 1:
+            tile_widths = [None]  # provider serves its natural full width
+    else:
+        classes = [np.arange(n, dtype=np.int32)]
+        tile_widths = [None]
+        width = provider.width if hasattr(provider, "width") else (
+            provider.max_width if hasattr(provider, "max_width")
+            else int(provider.adj.shape[1]))
+        acc_widths = [int(width)]
+        tail_width = int(width)
+    tail_enabled, thr = resolve_tail_threshold(tail_serial, n)
+    return run_ragged_engine(
+        n=n, provider=provider, deg_ext=deg_ext, classes=classes,
+        tile_widths=tile_widths, acc_widths=acc_widths, tail_width=tail_width,
+        mode=mode, heuristic=heuristic, kind=kind, use_kernel=use_kernel,
+        coarsen=coarsen, tail_enabled=tail_enabled, tail_threshold=thr,
+        max_iters=max_iters, algorithm=algorithm,
+        # colors <= tail_width + 1; the loser rule's degrees are bounded by
+        # deg_bound (the caller's original/column degrees)
+        pack_degrees=max(tail_width, deg_bound) < 2**15 - 1,
     )
 
 
@@ -190,14 +239,18 @@ def color_distance2(
     memory_budget: int = DEFAULT_D2_BUDGET,
     coarsen: int = 1,
     max_iters: int | None = None,
+    tiling="auto",
+    tail_serial="auto",
 ) -> ColoringResult:
-    """Distance-2 coloring of ``g`` with the SGR super-step.
+    """Distance-2 coloring of ``g`` with the rotated SGR super-step (§12).
 
-    ``strategy="auto"`` precomputes the G² padded adjacency when its
-    estimated footprint (view + two-hop pair expansion) fits
-    ``memory_budget``, else composes the two hops on the fly per super-step.
-    ``coarsen`` only affects the on-the-fly strategy (chunks the worklist to
-    bound the composed-gather transient).
+    ``strategy="auto"`` precomputes the G² CSR when its estimated footprint
+    (view + two-hop pair expansion) fits ``memory_budget``, else composes
+    the two hops on the fly per super-step.  Either way the engine applies
+    unchanged: one gather pair per super-step, degree-tiled dispatch over
+    G²'s histogram (precomputed only), and adaptive tail-serialization.
+    ``coarsen`` chunks the worklist to bound the composed-gather transient
+    (on-the-fly) or the tile transient (precomputed).
     """
     n = g.n
     if n == 0:
@@ -213,16 +266,17 @@ def color_distance2(
     strategy = resolve_strategy(strategy, est_bytes, memory_budget)
 
     if strategy == "precomputed":
-        adj2 = jnp.asarray(g.square().padded_adjacency())
-        step = partial(
-            sgr_step, adj2, deg_ext,
-            heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
-        )
+        g2 = g.square()
+        provider = DeviceCSR.from_csr(g2)
+        degrees_for_tiling = g2.degrees
     else:
         adj = jnp.asarray(g.padded_adjacency())
-        step = partial(
-            d2_sgr_step, adj, adj, deg_ext,
-            heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
-            include_first_hop=True, coarsen=coarsen,
-        )
-    return drive(step, n, mode, max_iters, algorithm="distance2_sgr")
+        provider = TwoHopRows(adj, adj, include_first_hop=True)
+        degrees_for_tiling = None
+    return run_d2_engine(
+        n=n, provider=provider, deg_ext=deg_ext, tiling=tiling,
+        degrees_for_tiling=degrees_for_tiling, mode=mode, heuristic=heuristic,
+        kind=firstfit, use_kernel=use_kernel, coarsen=coarsen,
+        tail_serial=tail_serial, max_iters=max_iters,
+        algorithm="distance2_sgr", deg_bound=g.max_degree,
+    )

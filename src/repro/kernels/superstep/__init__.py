@@ -1,0 +1,5 @@
+"""Fused FirstFit+Conflict super-step Pallas kernel (DESIGN.md §12)."""
+from repro.kernels.superstep.ops import superstep_tpu
+from repro.kernels.superstep.ref import superstep_ref
+
+__all__ = ["superstep_tpu", "superstep_ref"]

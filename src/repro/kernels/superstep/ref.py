@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the fused super-step kernel.
+
+Deliberately independent of both the kernel and the production engine:
+FirstFit candidacy is checked by direct quadratic comparison (as in
+``kernels/firstfit/ref.py``) and the loser rule is written out lane-wise,
+the most obviously-correct formulations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["superstep_ref"]
+
+
+def superstep_ref(
+    ids: jax.Array,
+    neigh_ids: jax.Array,
+    my_colors: jax.Array,
+    neigh_colors: jax.Array,
+    my_deg: jax.Array,
+    neigh_deg: jax.Array,
+    heuristic: str = "degree",
+) -> tuple[jax.Array, jax.Array]:
+    """(new_colors, need) for one rotated super-step over a padded tile."""
+    w, W = neigh_colors.shape
+    my_c = my_colors[:, None]
+    same = (neigh_colors == my_c) & (my_c > 0)
+    if heuristic == "id":
+        lose_lane = same & (ids[:, None] < neigh_ids)
+    else:
+        dv = my_deg[:, None]
+        lose_lane = same & (
+            (neigh_deg > dv) | ((neigh_deg == dv) & (neigh_ids < ids[:, None]))
+        )
+    need = jnp.any(lose_lane, axis=1) | (my_colors == 0)
+
+    # neighbors I provably beat refit too — their colors are not forbidden
+    ff_colors = jnp.where(same & ~lose_lane, 0, neigh_colors)
+    cand = jnp.arange(1, W + 2, dtype=jnp.int32)                 # (C,)
+    forbidden = (ff_colors[:, None, :] == cand[None, :, None]).any(-1)
+    ff = (jnp.argmax(~forbidden, axis=1) + 1).astype(jnp.int32)
+
+    new_c = jnp.where(need, ff, my_colors.astype(jnp.int32))
+    return new_c, need
