@@ -8,10 +8,19 @@ see benchmarks/common.py.  The roofline table (§Roofline) is separate:
 
 ``BENCH_coloring.json`` records per-algorithm colors + wall-clock on a small
 fixed suite (REPRO_BENCH_JSON_SCALE, default 0.02) so CI and future PRs can
-diff quality/perf without parsing the CSV.  Timing method (schema 2):
+diff quality/perf without parsing the CSV.  Timing method (schema 2+):
 ``seconds`` is the MEDIAN of post-warmup calls and ``compile_seconds`` the
 separately-measured one-time jit cost — single-shot numbers used to charge
 compilation to the algorithm.  ``--json-only`` skips the CSV matrix.
+
+Schema 3 adds ``--engine {ragged,padded,classic,sharded}``: the chosen
+engine is threaded through the algorithms that take one (``data_driven``,
+``fused``; ``distance2`` for ragged/sharded), the document carries a
+top-level ``engine`` field plus per-record ``engine`` /
+``halo_bytes_per_step`` (§13 halo traffic; 0 off the sharded engine).  Run
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise
+``sharded`` on simulated devices — CI's sharded bench-smoke artifact is
+``BENCH_coloring_sharded.json``.
 """
 from __future__ import annotations
 
@@ -39,7 +48,16 @@ SCALE_PRESETS = {
 }
 
 
-def bench_coloring_json(path: str = JSON_PATH) -> dict:
+def _engine_opts(alg: str, engine: str) -> dict:
+    """The engine kwargs ``alg`` understands (empty when it takes none)."""
+    if alg in ("data_driven", "fused"):
+        return {"engine": engine}
+    if alg == "distance2" and engine in ("ragged", "sharded"):
+        return {"engine": engine}
+    return {}
+
+
+def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged") -> dict:
     """Per-algorithm colors + wall-clock on the small suite, as JSON."""
     from benchmarks.common import timeit_median
     from repro import api
@@ -50,8 +68,9 @@ def bench_coloring_json(path: str = JSON_PATH) -> dict:
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
     graphs = {name: build_graph(name, json_scale) for name in JSON_GRAPHS}
     doc = {
-        "schema": 2,
+        "schema": 3,
         "scale": json_scale,
+        "engine": engine,
         "graphs": {
             name: {"n": g.n, "m": g.m, "max_degree": g.max_degree}
             for name, g in graphs.items()
@@ -62,11 +81,12 @@ def bench_coloring_json(path: str = JSON_PATH) -> dict:
     for alg in api.algorithms():
         if alg == "bipartite":  # needs a BipartiteGraph; measured below
             continue
+        opts = _engine_opts(alg, engine)
         per_graph = {}
         for name, g in graphs.items():
             try:
                 seconds, compile_s, r = timeit_median(
-                    lambda: api.color(g, algorithm=alg))
+                    lambda: api.color(g, algorithm=alg, **opts))
             except Exception as e:  # keep the harness going
                 per_graph[name] = {"error": f"{type(e).__name__}: {e}"}
                 continue
@@ -76,6 +96,9 @@ def bench_coloring_json(path: str = JSON_PATH) -> dict:
                 "compile_seconds": round(compile_s, 6),
                 "iterations": r.iterations,
                 "valid": bool(is_valid_coloring(g, r.colors)),
+                "engine": opts.get("engine", "-"),
+                "halo_bytes_per_step": round(
+                    getattr(r, "halo_bytes_per_step", 0.0), 1),
             }
         doc["algorithms"][alg] = per_graph
     band = 2
@@ -95,6 +118,9 @@ def bench_coloring_json(path: str = JSON_PATH) -> dict:
     return doc
 
 
+ENGINES = ("ragged", "padded", "classic", "sharded")
+
+
 def main() -> None:
     args = sys.argv[1:]
     if "--scale" in args:
@@ -107,6 +133,13 @@ def main() -> None:
         # set BEFORE benchmarks.common/paper are imported (they read at import)
         os.environ["REPRO_BENCH_SCALE"] = str(csv_scale)
         os.environ["REPRO_BENCH_JSON_SCALE"] = str(json_scale)
+    engine = "ragged"
+    if "--engine" in args:
+        tail = args[args.index("--engine") + 1:]
+        engine = tail[0] if tail else None
+        if engine not in ENGINES:
+            raise SystemExit(
+                f"unknown --engine {engine!r}; options: {list(ENGINES)}")
     json_only = "--json-only" in args
     if not json_only:
         from benchmarks.d2 import D2_BENCHES
@@ -124,8 +157,8 @@ def main() -> None:
                 print(f"{name},{us:.1f},{derived}", flush=True)
             print(f"# {bench.__name__} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
-    bench_coloring_json()
-    print(f"# wrote {JSON_PATH}", file=sys.stderr)
+    bench_coloring_json(engine=engine)
+    print(f"# wrote {JSON_PATH} (engine={engine})", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,13 @@ Registered names (see ``algorithms()``):
 and ``algorithm="distance2"`` it dispatches to the batched multi-graph
 engine (``core/batch.py``) — one jitted call for the whole batch — and
 falls back to a per-graph loop otherwise.
+
+Multi-device (§13): ``color(g, engine="sharded")`` runs the sharded ragged
+engine over every available device (bit-identical colors, halo-exchange
+communication only) and ``color_batch(graphs, engine="sharded")`` places
+batches across devices (shard-per-graph when the batch fills the mesh,
+partition-within-graph otherwise).  Both fall back to the single-device
+engines when only one device is present.
 """
 from __future__ import annotations
 
@@ -97,16 +104,32 @@ def color_batch(
     """
     graphs = list(graphs)
     if algorithm in ("fused", "distance2"):
-        from repro.core.batch import color_batch_fused
+        from repro.core.batch import color_batch_fused, color_batch_sharded
 
         supported = {"heuristic", "firstfit", "use_kernel", "max_iters",
-                     "tail_serial"}
+                     "tail_serial", "engine", "devices"}
         extra = set(opts) - supported
         if extra:
             raise ValueError(
                 f"options {sorted(extra)} are not supported by the batched "
                 f"fused engine (supported: {sorted(supported)}); "
                 f"use color(g, {algorithm!r}, ...) per graph instead"
+            )
+        engine = opts.pop("engine", "batch")
+        devices = opts.pop("devices", None)
+        if engine == "sharded":
+            return color_batch_sharded(
+                graphs, distance2=(algorithm == "distance2"),
+                devices=devices, **opts
+            )
+        if engine != "batch":
+            raise ValueError(
+                f"unknown batch engine {engine!r}; options: batch, sharded"
+            )
+        if devices is not None:
+            raise ValueError(
+                "devices= only applies to engine='sharded'; the default "
+                "batched engine runs on the default device placement"
             )
         return color_batch_fused(
             graphs, distance2=(algorithm == "distance2"), **opts

@@ -1,9 +1,11 @@
 """Core graph-coloring engine — the paper's contribution in JAX."""
 from repro.core.batch import (GraphBatch, batched_ragged_step,
-                              batched_sgr_step, color_batch_fused)
+                              batched_sgr_step, color_batch_fused,
+                              color_batch_sharded)
 from repro.core.coloring import ColoringResult, color_data_driven, color_fused
-from repro.core.csr import (CSRGraph, DeviceCSR, DeviceGraph,
+from repro.core.csr import (CSRGraph, DeviceCSR, DeviceGraph, PartitionedCSR,
                             auto_tile_thresholds, csr_from_edges, next_pow2)
+from repro.core.distributed import color_distributed
 from repro.core.jp import color_jp, color_multihash
 from repro.core.serial import color_serial, greedy_serial
 from repro.core.threestep import color_threestep
@@ -15,13 +17,16 @@ __all__ = [
     "DeviceCSR",
     "DeviceGraph",
     "GraphBatch",
+    "PartitionedCSR",
     "auto_tile_thresholds",
     "csr_from_edges",
     "next_pow2",
     "ColoringResult",
     "color_data_driven",
+    "color_distributed",
     "color_fused",
     "color_batch_fused",
+    "color_batch_sharded",
     "batched_ragged_step",
     "batched_sgr_step",
     "color_topology",

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.coloring import (
     ColoringResult,
@@ -51,7 +52,7 @@ from repro.core.coloring import (
 from repro.core.csr import CSRGraph, next_pow2
 
 __all__ = ["GraphBatch", "batched_sgr_step", "batched_ragged_step",
-           "color_batch_fused"]
+           "color_batch_fused", "color_batch_sharded"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -339,3 +340,82 @@ def color_batch_fused(
             algorithm=algo,
         ))
     return out
+
+
+_EMPTY = CSRGraph(np.zeros(1, np.int64), np.zeros(0, np.int32))
+
+
+def color_batch_sharded(
+    graphs: "Iterable[CSRGraph]",
+    *,
+    devices=None,
+    heuristic: str = "degree",
+    firstfit: str = "bitset",
+    use_kernel: bool = False,
+    max_iters: int | None = None,
+    distance2: bool = False,
+    tail_serial="auto",
+) -> list[ColoringResult]:
+    """Place a multi-graph batch across devices (§13 batch placement).
+
+    Two regimes, both bit-identical to the single-device batched engine
+    (which is itself bit-identical to per-graph ``mode="fused"`` runs):
+
+    * ``B >= ndev`` — **shard-per-graph**: the usual width-bucketed
+      sub-batches, with each sub-batch's stacked tensors sharded on the
+      BATCH axis (padded to a device multiple with empty no-op graphs).
+      Graphs are independent, so the partitioned program needs no
+      cross-device communication at all — placement is a pure perf policy.
+    * ``B < ndev`` — **partition-within-graph**: too few graphs to fill the
+      mesh, so each one runs the single-graph sharded engine (§13 halo
+      exchange) over all devices in turn.
+    """
+    devices = list(devices) if devices is not None else jax.devices()
+    ndev = len(devices)
+    graphs = list(graphs)
+    B = len(graphs)
+    opts = dict(heuristic=heuristic, firstfit=firstfit,
+                max_iters=max_iters, tail_serial=tail_serial)
+    if ndev <= 1 or B == 0:
+        return color_batch_fused(graphs, distance2=distance2,
+                                 use_kernel=use_kernel, **opts)
+    if use_kernel:
+        raise ValueError("sharded batch placement does not support "
+                         "use_kernel=True")
+    if B < ndev:
+        if distance2:
+            from repro.d2.coloring import color_distance2
+
+            return [color_distance2(g, engine="sharded", devices=devices,
+                                    **opts) for g in graphs]
+        from repro.core.coloring import color_data_driven
+
+        return [color_data_driven(g, engine="sharded", devices=devices,
+                                  **opts) for g in graphs]
+
+    mesh = Mesh(np.asarray(devices), ("b",))
+    sh3 = NamedSharding(mesh, P("b", None, None))
+    sh2 = NamedSharding(mesh, P("b", None))
+    keys = [
+        next_pow2(max(
+            g.two_hop_degree_bound() if distance2 else g.max_degree, 1))
+        for g in graphs
+    ]
+    by_key: dict[int, list[int]] = {}
+    for i, k in enumerate(keys):
+        by_key.setdefault(k, []).append(i)
+    results: list = [None] * B
+    for idxs in by_key.values():
+        sub = [graphs[i] for i in idxs]
+        sub += [_EMPTY] * ((-len(sub)) % ndev)  # no-op rows to a device multiple
+        batch = GraphBatch.from_graphs(sub, distance2=distance2)
+        batch = dataclasses.replace(
+            batch,
+            adj=jax.device_put(batch.adj, sh3),
+            deg_ext=jax.device_put(batch.deg_ext, sh2),
+        )
+        res = color_batch_fused(batch, distance2=distance2,
+                                use_kernel=use_kernel, **opts)
+        for i, r in zip(idxs, res):
+            results[i] = r
+    return results

@@ -95,6 +95,9 @@ class ColoringResult:
     padded_work: int         # gather cells dispatched: Σ lanes × tile width
     converged: bool
     algorithm: str = "data_driven_sgr"
+    # sharded engine only (§13): bytes of boundary colors a device receives
+    # per super-step, averaged over the run; 0 on single-device engines
+    halo_bytes_per_step: float = 0.0
 
     @property
     def num_colors(self) -> int:
@@ -815,15 +818,21 @@ def color_data_driven(
     engine: str = "ragged",
     tiling="auto",
     tail_serial="auto",
+    devices=None,
 ) -> ColoringResult:
     """Color ``g`` with the paper's optimized data-driven SGR algorithm.
 
     ``engine`` picks the execution engine (see the module docstring):
     ``ragged`` (CSR-native rotated super-step, the default), ``padded``
     (same schedule over the dense padded-adjacency table — bit-identical
-    colors), or ``classic`` (the two-phase baseline).  ``tiling`` controls
-    the degree-tiled dispatch (``"auto"``, explicit thresholds, or ``None``)
-    and ``tail_serial`` the adaptive tail-serialization (``"auto"``, an
+    colors), ``classic`` (the two-phase baseline), or ``sharded`` (the §13
+    multi-device engine over ``devices`` — defaults to every available
+    device, falls back to ``ragged`` when only one is present; colors are
+    bit-identical either way, and ``mode`` is pinned to the fused
+    schedule/accounting so results never depend on the device count).
+    ``tiling`` controls the degree-tiled
+    dispatch (``"auto"``, explicit thresholds, or ``None``) and
+    ``tail_serial`` the adaptive tail-serialization (``"auto"``, an
     explicit live-count threshold, or ``None`` to disable).
 
     ``coarsen_lanes`` models the paper's thread-coarsening launch config
@@ -841,9 +850,32 @@ def color_data_driven(
             g, heuristic, firstfit, use_kernel, coarsen_ff, coarsen_cr,
             coarsen_lanes, buckets, mode, max_iters, reuse_rows,
         )
+    if engine == "sharded":
+        # validate BEFORE the one-device fallback so the accepted option
+        # surface never depends on how many devices happen to be present
+        if use_kernel:
+            raise ValueError(
+                "engine='sharded' does not support use_kernel=True")
+        if coarsen_ff != 1 or coarsen_cr != 1 or coarsen_lanes:
+            raise ValueError(
+                "engine='sharded' runs the uncoarsened (coarsen=1) schedule; "
+                "coarsen_ff/coarsen_cr/coarsen_lanes are not supported")
+        devs = list(devices) if devices is not None else jax.devices()
+        if len(devs) > 1:
+            from repro.core.distributed import color_distributed
+
+            return color_distributed(
+                g, devices=devs, heuristic=heuristic, firstfit=firstfit,
+                buckets=buckets, tiling=tiling, tail_serial=tail_serial,
+                max_iters=max_iters,
+            )
+        # one device: the sharded schedule IS the ragged fused one — pin
+        # mode so colors AND accounting are device-count-independent
+        engine, mode = "ragged", "fused"
     if engine not in ("ragged", "padded"):
         raise ValueError(
-            f"unknown engine {engine!r}; options: ragged, padded, classic"
+            f"unknown engine {engine!r}; options: ragged, padded, classic, "
+            f"sharded"
         )
 
     classes, widths = _resolve_classes(g.degrees, buckets, tiling)

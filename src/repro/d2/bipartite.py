@@ -31,13 +31,14 @@ import numpy as np
 
 from repro.api import register
 from repro.core.coloring import ColoringResult
-from repro.core.csr import (CSRGraph, DeviceCSR, compose_pairs,
-                            csr_from_edges, padded_ragged)
+from repro.core.csr import (CSRGraph, DeviceCSR, PartitionedCSR,
+                            compose_pairs, csr_from_edges, padded_ragged)
 from repro.d2.coloring import (
     DEFAULT_D2_BUDGET,
     TwoHopRows,
     resolve_strategy,
     run_d2_engine,
+    run_sharded_d2_engine,
 )
 
 __all__ = [
@@ -46,6 +47,16 @@ __all__ = [
     "color_bipartite",
     "compress_jacobian_pattern",
 ]
+
+
+def _resolve_bipartite_strategy(bg: "BipartiteGraph", strategy: str,
+                                budget: int) -> str:
+    """Footprint-gated strategy pick, shared by ragged and sharded paths
+    so ``auto`` resolves identically on either engine."""
+    w2_bound = max(bg.conflict_degree_bound(), 1)
+    pair_bound = int((bg.row_degrees.astype(np.int64) ** 2).sum())
+    return resolve_strategy(
+        strategy, 4 * bg.n_cols * w2_bound + 16 * pair_bound, budget)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +170,8 @@ def color_bipartite(
     max_iters: int | None = None,
     tiling="auto",
     tail_serial="auto",
+    engine: str = "ragged",
+    devices=None,
 ) -> ColoringResult:
     """Partial coloring of ``bg``'s column side with the SGR super-step.
 
@@ -168,8 +181,35 @@ def color_bipartite(
     column-conflict graph's CSR, the on-the-fly strategy composes the
     cols→rows→cols gathers per super-step; both inherit degree-tiled
     dispatch (precomputed) and adaptive tail-serialization.
+    ``engine="sharded"`` distributes the column side over ``devices`` along
+    a ``PartitionedCSR.from_bipartite`` plan (§13), bit-identical to the
+    single-device run; one device falls back to ``ragged``.
     """
     nc = bg.n_cols
+    if engine == "sharded":
+        import jax
+
+        # validated before the one-device fallback: option surface must not
+        # depend on how many devices are present
+        if use_kernel:
+            raise ValueError(
+                "engine='sharded' does not support use_kernel=True")
+        if coarsen != 1:
+            raise ValueError(
+                "engine='sharded' runs the unchunked (coarsen=1) schedule")
+        devs = list(devices) if devices is not None else jax.devices()
+        if len(devs) > 1 and nc > 0:
+            return _color_bipartite_sharded(
+                bg, devs, heuristic=heuristic, firstfit=firstfit,
+                strategy=strategy, memory_budget=memory_budget,
+                tiling=tiling, tail_serial=tail_serial, max_iters=max_iters,
+            )
+        # one device: fall back to the ragged fused realization — pin mode
+        # so colors AND accounting are device-count-independent
+        mode = "fused"
+    elif engine != "ragged":
+        raise ValueError(
+            f"unknown engine {engine!r}; options: ragged, sharded")
     if nc == 0:
         return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
                               algorithm="bipartite_partial_sgr")
@@ -177,10 +217,7 @@ def color_bipartite(
     deg_ext = jnp.asarray(
         np.concatenate([bg.col_degrees, np.zeros(1, np.int32)]).astype(np.int32)
     )
-    w2_bound = max(bg.conflict_degree_bound(), 1)
-    pair_bound = int((bg.row_degrees.astype(np.int64) ** 2).sum())
-    est_bytes = 4 * nc * w2_bound + 16 * pair_bound
-    strategy = resolve_strategy(strategy, est_bytes, memory_budget)
+    strategy = _resolve_bipartite_strategy(bg, strategy, memory_budget)
 
     if strategy == "precomputed":
         cg = bg.column_conflict_graph()
@@ -198,6 +235,50 @@ def color_bipartite(
         tail_serial=tail_serial, max_iters=max_iters,
         algorithm="bipartite_partial_sgr",
         deg_bound=int(bg.col_degrees.max(initial=0)),
+    )
+
+
+def _color_bipartite_sharded(
+    bg: BipartiteGraph, devices, *, heuristic, firstfit, strategy,
+    memory_budget, tiling, tail_serial, max_iters,
+) -> ColoringResult:
+    """The §13 multi-device realization of ``color_bipartite``."""
+    nc = bg.n_cols
+    ndev = len(devices)
+    max_iters = max_iters or nc + 1
+    deg_ext_np = np.concatenate(
+        [bg.col_degrees, np.zeros(1, np.int32)]).astype(np.int32)
+    strategy = _resolve_bipartite_strategy(bg, strategy, memory_budget)
+
+    if strategy == "precomputed":
+        cg = bg.column_conflict_graph()
+        plan = PartitionedCSR.from_graph(cg, ndev)
+        return run_sharded_d2_engine(
+            n=nc, devices=devices, plan=plan, provider_kind="csr",
+            prov_np=plan.stack_shards(cg), deg_ext_np=deg_ext_np,
+            degrees_for_tiling=cg.degrees, tiling=tiling,
+            heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
+            max_iters=max_iters,
+            algorithm=f"bipartite_partial_sgr_sharded_{ndev}dev",
+            tail_provider=DeviceCSR.from_csr(cg),
+            deg_bound=int(bg.col_degrees.max(initial=0)),
+        )
+    plan = PartitionedCSR.from_bipartite(bg, ndev)
+    cols2rows, rows2cols = bg.padded_halves()
+    full_width = cols2rows.shape[1] * rows2cols.shape[1]
+    return run_sharded_d2_engine(
+        n=nc, devices=devices, plan=plan, provider_kind="twohop",
+        prov_np=(plan.stack_rows(cols2rows, fill=bg.n_rows), rows2cols),
+        deg_ext_np=deg_ext_np, degrees_for_tiling=None, tiling=tiling,
+        heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
+        max_iters=max_iters,
+        algorithm=f"bipartite_partial_sgr_sharded_{ndev}dev",
+        tail_provider=TwoHopRows(jnp.asarray(cols2rows),
+                                 jnp.asarray(rows2cols),
+                                 include_first_hop=False),
+        include_first_hop=False,
+        deg_bound=int(bg.col_degrees.max(initial=0)),
+        full_width=full_width,
     )
 
 

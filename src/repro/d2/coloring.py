@@ -47,7 +47,7 @@ from repro.core.coloring import (
     resolve_tail_threshold,
     run_ragged_engine,
 )
-from repro.core.csr import CSRGraph, DeviceCSR
+from repro.core.csr import CSRGraph, DeviceCSR, PartitionedCSR
 
 __all__ = ["color_distance2", "d2_sgr_step", "TwoHopRows", "DEFAULT_D2_BUDGET"]
 
@@ -65,12 +65,23 @@ class TwoHopRows:
     partial coloring, ``adj_a`` is cols→rows, ``adj_b`` rows→cols, and only
     hop-2 (column-side) ids carry colors.  Tiles may contain duplicate and
     self lanes — harmless to the rotated super-step (see module docstring).
+
+    The provider also runs over a ``PartitionedCSR`` shard (§13): pass the
+    shard's dense first-hop slice as ``adj_a`` with ``start`` = its first
+    owned id and ``n_colored`` = the GLOBAL colored-side count.  Worklist
+    ids stay global (``id - start`` picks the local row), hop-1 output ids
+    stay global, and ``adj_b`` is the whole second hop — so the composed
+    tile is identical to the unsharded one and sharded distance-2/bipartite
+    colors match single-device runs bit-for-bit.
     """
 
-    def __init__(self, adj_a, adj_b, include_first_hop: bool = True):
+    def __init__(self, adj_a, adj_b, include_first_hop: bool = True,
+                 start=0, n_colored: int | None = None):
         self.adj_a = adj_a
         self.adj_b = adj_b
         self.include_first_hop = bool(include_first_hop)
+        self.start = start
+        self.n_colored = n_colored
 
     @property
     def width(self) -> int:
@@ -78,11 +89,19 @@ class TwoHopRows:
         return w1 * w2 + (w1 if self.include_first_hop else 0)
 
     def rows(self, ids, width: int | None = None):
-        n = self.adj_a.shape[0]               # colored side
-        rows1 = gather_rows(self.adj_a, ids, sentinel=self.adj_b.shape[0])
+        n = (int(self.adj_a.shape[0]) if self.n_colored is None
+             else self.n_colored)               # colored side (global)
+        n_rows = self.adj_a.shape[0]
+        lidx = ids - self.start
+        rows1 = self.adj_a[jnp.clip(lidx, 0, n_rows - 1)]
+        valid = (ids < n) & (lidx < n_rows)
+        rows1 = jnp.where(valid[:, None], rows1, self.adj_b.shape[0])
         rows2 = gather_rows(self.adj_b, rows1.reshape(-1), sentinel=n)
         rows2 = rows2.reshape(ids.shape[0], -1)
         if self.include_first_hop:
+            # hop-1 fill ids index the MID side; remap masked lanes to the
+            # colored-side sentinel so they stay inert through colors_ext
+            rows1 = jnp.where(valid[:, None], rows1, n)
             return jnp.concatenate([rows1, rows2], axis=1)
         return rows2
 
@@ -92,8 +111,8 @@ class TwoHopRows:
 
 jax.tree_util.register_pytree_node(
     TwoHopRows,
-    lambda t: ((t.adj_a, t.adj_b), (t.include_first_hop,)),
-    lambda aux, ch: TwoHopRows(*ch, *aux),
+    lambda t: ((t.adj_a, t.adj_b, t.start), (t.include_first_hop, t.n_colored)),
+    lambda aux, ch: TwoHopRows(ch[0], ch[1], aux[0], ch[2], aux[1]),
 )
 
 
@@ -227,6 +246,58 @@ def resolve_strategy(strategy: str, est_bytes: int, budget: int) -> str:
     return strategy
 
 
+def resolve_d2_strategy(g: CSRGraph, strategy: str, budget: int) -> str:
+    """Footprint-gated strategy pick, shared by the ragged and sharded
+    paths so ``auto`` resolves identically on either engine: the estimate
+    is the (n, W2) square view plus the transient two-hop pair expansion.
+    """
+    w2_bound = max(g.two_hop_degree_bound(), 1)
+    pair_bound = g.m + int((g.degrees.astype(np.int64) ** 2).sum())
+    return resolve_strategy(strategy, 4 * g.n * w2_bound + 16 * pair_bound,
+                            budget)
+
+
+def run_sharded_d2_engine(
+    *, n, devices, plan, provider_kind, prov_np, deg_ext_np,
+    degrees_for_tiling, tiling, heuristic, kind, tail_serial, max_iters,
+    algorithm, tail_provider, include_first_hop=True, deg_bound: int = 2**15,
+    full_width: int | None = None,
+) -> ColoringResult:
+    """Drive the §13 sharded engine over a D2 partition plan.
+
+    The sharded sibling of ``run_d2_engine`` (same class/width resolution,
+    same pack gate), shared by distance-2 and bipartite: ``provider_kind``
+    is ``"csr"`` for precomputed strategies (the G²/conflict-graph shards)
+    and ``"twohop"`` for on-the-fly composition (``TwoHopRows`` over the
+    plan's first-hop slices).
+    """
+    from repro.core.coloring import resolve_tail_threshold
+    from repro.core.distributed import run_sharded_engine
+
+    if degrees_for_tiling is not None:
+        classes, tile_widths = _resolve_classes(degrees_for_tiling, (), tiling)
+        acc_widths = tile_widths
+        tail_width = max(int(np.asarray(degrees_for_tiling).max(initial=0)), 1)
+        if len(classes) == 1:
+            tile_widths = [None]  # provider serves its natural full width
+    else:
+        classes = [np.arange(n, dtype=np.int32)]
+        tile_widths = [None]
+        acc_widths = [int(full_width)]
+        tail_width = int(full_width)
+    tail_enabled, thr = resolve_tail_threshold(tail_serial, n)
+    return run_sharded_engine(
+        plan=plan, devices=devices, provider_kind=provider_kind,
+        prov_np=prov_np, deg_ext_np=deg_ext_np, classes=classes,
+        tile_widths=tile_widths, acc_widths=acc_widths,
+        tail_width=tail_width, tail_provider=tail_provider,
+        heuristic=heuristic, kind=kind, tail_enabled=tail_enabled,
+        tail_threshold=thr, max_iters=max_iters, algorithm=algorithm,
+        pack_degrees=max(tail_width, deg_bound) < 2**15 - 1,
+        include_first_hop=include_first_hop,
+    )
+
+
 @register("distance2")
 def color_distance2(
     g: CSRGraph,
@@ -241,6 +312,8 @@ def color_distance2(
     max_iters: int | None = None,
     tiling="auto",
     tail_serial="auto",
+    engine: str = "ragged",
+    devices=None,
 ) -> ColoringResult:
     """Distance-2 coloring of ``g`` with the rotated SGR super-step (§12).
 
@@ -251,8 +324,37 @@ def color_distance2(
     G²'s histogram (precomputed only), and adaptive tail-serialization.
     ``coarsen`` chunks the worklist to bound the composed-gather transient
     (on-the-fly) or the tile transient (precomputed).
+
+    ``engine="sharded"`` runs the same schedule over every device in
+    ``devices`` (§13): the precomputed strategy shards G²'s CSR along a
+    ``PartitionedCSR`` plan (two-hop reach decides the halo sets), the
+    on-the-fly strategy runs ``TwoHopRows`` over the plan's first-hop
+    slices.  Colors are bit-identical to the single-device run; with one
+    device it falls back to ``ragged``.
     """
     n = g.n
+    if engine == "sharded":
+        # validated before the one-device fallback: option surface must not
+        # depend on how many devices are present
+        if use_kernel:
+            raise ValueError(
+                "engine='sharded' does not support use_kernel=True")
+        if coarsen != 1:
+            raise ValueError(
+                "engine='sharded' runs the unchunked (coarsen=1) schedule")
+        devs = list(devices) if devices is not None else jax.devices()
+        if len(devs) > 1 and n > 0:
+            return _color_distance2_sharded(
+                g, devs, heuristic=heuristic, firstfit=firstfit,
+                strategy=strategy, memory_budget=memory_budget,
+                tiling=tiling, tail_serial=tail_serial, max_iters=max_iters,
+            )
+        # one device: fall back to the ragged fused realization — pin mode
+        # so colors AND accounting are device-count-independent
+        mode = "fused"
+    elif engine != "ragged":
+        raise ValueError(
+            f"unknown engine {engine!r}; options: ragged, sharded")
     if n == 0:
         return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
                               algorithm="distance2_sgr")
@@ -260,10 +362,7 @@ def color_distance2(
     deg_ext = jnp.asarray(
         np.concatenate([g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
     )
-    w2_bound = max(g.two_hop_degree_bound(), 1)
-    pair_bound = g.m + int((g.degrees.astype(np.int64) ** 2).sum())
-    est_bytes = 4 * n * w2_bound + 16 * pair_bound
-    strategy = resolve_strategy(strategy, est_bytes, memory_budget)
+    strategy = resolve_d2_strategy(g, strategy, memory_budget)
 
     if strategy == "precomputed":
         g2 = g.square()
@@ -279,4 +378,46 @@ def color_distance2(
         kind=firstfit, use_kernel=use_kernel, coarsen=coarsen,
         tail_serial=tail_serial, max_iters=max_iters,
         algorithm="distance2_sgr", deg_bound=g.max_degree,
+    )
+
+
+def _color_distance2_sharded(
+    g: CSRGraph, devices, *, heuristic, firstfit, strategy, memory_budget,
+    tiling, tail_serial, max_iters,
+) -> ColoringResult:
+    """The §13 multi-device realization of ``color_distance2``."""
+    n = g.n
+    ndev = len(devices)
+    max_iters = max_iters or n + 1
+    deg_ext_np = np.concatenate(
+        [g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
+    strategy = resolve_d2_strategy(g, strategy, memory_budget)
+
+    if strategy == "precomputed":
+        # G² reduces distance-2 to distance-1 (§11), so the plan partitions
+        # G² directly: its 1-hop boundary IS the two-hop reader set of g
+        g2 = g.square()
+        plan = PartitionedCSR.from_graph(g2, ndev)
+        return run_sharded_d2_engine(
+            n=n, devices=devices, plan=plan, provider_kind="csr",
+            prov_np=plan.stack_shards(g2), deg_ext_np=deg_ext_np,
+            degrees_for_tiling=g2.degrees, tiling=tiling,
+            heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
+            max_iters=max_iters,
+            algorithm=f"distance2_sgr_sharded_{ndev}dev",
+            tail_provider=DeviceCSR.from_csr(g2), deg_bound=g.max_degree,
+        )
+    plan = PartitionedCSR.from_graph(g, ndev, boundary_mode="two_hop")
+    adj_np = g.padded_adjacency()
+    adj = jnp.asarray(adj_np)
+    full_width = adj_np.shape[1] * adj_np.shape[1] + adj_np.shape[1]
+    return run_sharded_d2_engine(
+        n=n, devices=devices, plan=plan, provider_kind="twohop",
+        prov_np=(plan.stack_rows(adj_np, fill=n), adj_np),
+        deg_ext_np=deg_ext_np, degrees_for_tiling=None, tiling=tiling,
+        heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
+        max_iters=max_iters, algorithm=f"distance2_sgr_sharded_{ndev}dev",
+        tail_provider=TwoHopRows(adj, adj, include_first_hop=True),
+        include_first_hop=True, deg_bound=g.max_degree,
+        full_width=full_width,
     )

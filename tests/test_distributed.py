@@ -25,23 +25,119 @@ def _run(code: str, flags="--xla_force_host_platform_device_count=8") -> str:
     return out.stdout
 
 
-def test_distributed_coloring_8dev():
+def test_sharded_suite_bit_identity_8dev():
+    """§13 acceptance: sharded ≡ ragged on EVERY suite graph, halo < 4n."""
     out = _run(
         """
 import jax
 assert jax.device_count() == 8
-from repro.core.distributed import color_distributed
-from repro.core import is_valid_coloring, color_data_driven
-from repro.graphs import erdos_renyi, rmat
-for g in [erdos_renyi(1000, 8.0, seed=3), rmat(2048, 10.0, seed=5)]:
+from repro.core import color_data_driven, color_distributed, is_valid_coloring
+from repro.graphs.suite import build_suite
+for name, g in build_suite(0.02).items():
     r = color_distributed(g)
-    assert is_valid_coloring(g, r.colors), "invalid distributed coloring"
-    single = color_data_driven(g)
-    assert r.num_colors <= single.num_colors + 3
-print("DIST_OK")
+    s = color_data_driven(g)
+    assert (r.colors == s.colors).all(), f"{name}: sharded != ragged"
+    assert is_valid_coloring(g, r.colors), name
+    assert r.halo_bytes_per_step < 4 * g.n, (
+        name, r.halo_bytes_per_step, 4 * g.n)
+    assert r.algorithm == "sharded_sgr_8dev"
+print("SWEEP_OK")
 """
     )
-    assert "DIST_OK" in out
+    assert "SWEEP_OK" in out
+
+
+def test_sharded_unpacked_halo_8dev():
+    """n >= 2**15 disables halo packing; identity + halo bound still hold."""
+    out = _run(
+        """
+import jax
+from repro.core import color_data_driven, color_distributed
+from repro.graphs import road
+g = road(40000, seed=9)
+assert g.n >= 2**15
+r = color_distributed(g)
+s = color_data_driven(g)
+assert (r.colors == s.colors).all()
+assert r.halo_bytes_per_step < 4 * g.n, r.halo_bytes_per_step
+print("BIG_OK")
+"""
+    )
+    assert "BIG_OK" in out
+
+
+def test_sharded_d2_bipartite_8dev():
+    """Distance-2 and bipartite run sharded, both strategies, bit-identical."""
+    out = _run(
+        """
+import numpy as np
+from repro.d2 import (color_bipartite, color_distance2, validate_bipartite,
+                      validate_d2)
+from repro.d2.bipartite import BipartiteGraph
+from repro.graphs import erdos_renyi, grid2d
+for g in [erdos_renyi(500, 6.0, seed=0), grid2d(15, 18)]:
+    for strat in ("precomputed", "onthefly"):
+        r = color_distance2(g, engine="sharded", strategy=strat)
+        base = color_distance2(g, strategy=strat)
+        assert (r.colors == base.colors).all(), strat
+        assert validate_d2(g, r.colors), strat
+        assert r.algorithm == "distance2_sgr_sharded_8dev"
+bg = BipartiteGraph.from_dense(np.random.default_rng(0).random((80, 120)) < 0.06)
+for strat in ("precomputed", "onthefly"):
+    r = color_bipartite(bg, engine="sharded", strategy=strat)
+    base = color_bipartite(bg, strategy=strat)
+    assert (r.colors == base.colors).all(), strat
+    assert validate_bipartite(bg, r.colors), strat
+print("D2_OK")
+"""
+    )
+    assert "D2_OK" in out
+
+
+def test_sharded_batch_8dev():
+    """Batch placement: shard-per-graph and partition-within-graph paths."""
+    out = _run(
+        """
+import repro
+from repro.core import is_valid_coloring
+from repro.graphs.suite import serving_mix
+graphs = serving_mix(10, scale=0.3)
+base = repro.color_batch(graphs, algorithm="fused")
+for engine_graphs in (graphs, graphs[:2]):  # B >= ndev and B < ndev
+    sh = repro.color_batch(engine_graphs, algorithm="fused", engine="sharded")
+    for g, rb, rs in zip(engine_graphs, base, sh):
+        assert (rb.colors == rs.colors).all()
+        assert is_valid_coloring(g, rs.colors)
+d2b = repro.color_batch(graphs[:9], algorithm="distance2")
+d2s = repro.color_batch(graphs[:9], algorithm="distance2", engine="sharded")
+for rb, rs in zip(d2b, d2s):
+    assert (rb.colors == rs.colors).all()
+print("BATCH_OK")
+"""
+    )
+    assert "BATCH_OK" in out
+
+
+def test_sharded_error_paths_8dev():
+    """engine='sharded' raises the ragged path's exact heuristic error."""
+    out = _run(
+        """
+import repro
+from repro.graphs import grid2d
+g = grid2d(10, 12)
+msgs = []
+for engine in ("ragged", "sharded"):
+    try:
+        repro.color(g, "data_driven", engine=engine, heuristic="nope")
+        raise SystemExit(f"{engine}: no error raised")
+    except ValueError as e:
+        msgs.append(str(e))
+assert msgs[0] == msgs[1], msgs
+assert "unknown heuristic" in msgs[0]
+print("ERR_OK")
+"""
+    )
+    assert "ERR_OK" in out
 
 
 def test_dryrun_cell_on_tiny_mesh(tmp_path):

@@ -1,0 +1,269 @@
+"""Sharded engine (§13): partition-plan invariants + single-device parity.
+
+Everything here runs in the ordinary single-device pytest process: the
+partition plan is pure host numpy, and ``color_distributed`` exercises the
+full shard_map machinery even on a one-device mesh — where its contract is
+the strongest in the tree: bit-identical to ``color_data_driven
+(mode="fused")`` INCLUDING the work/padded-work accounting.  The
+8-simulated-device behaviour lives in ``tests/test_distributed.py``.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core import (
+    ColoringResult,
+    PartitionedCSR,
+    color_data_driven,
+    color_distributed,
+    is_valid_coloring,
+)
+from repro.d2.bipartite import BipartiteGraph
+from repro.graphs import erdos_renyi, grid2d, power_law, road
+
+GRAPHS = {
+    "er": lambda: erdos_renyi(700, 8.0, seed=0),
+    "grid": lambda: grid2d(18, 22),
+    "powerlaw": lambda: power_law(600, 6.0, seed=1),
+    "road": lambda: road(650, seed=2),
+}
+
+
+def _bipartite(seed=0, shape=(70, 110), p=0.06):
+    rng = np.random.default_rng(seed)
+    return BipartiteGraph.from_dense(rng.random(shape) < p)
+
+
+# --------------------------------------------------------------------------
+# partition-plan invariants (satellite: halo send-list property test)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("ndev", [2, 3, 8])
+def test_plan_partitions_each_range(gname, ndev):
+    g = GRAPHS[gname]()
+    plan = PartitionedCSR.from_graph(g, ndev)
+    assert plan.starts[0] == 0 and plan.starts[-1] == g.n
+    assert (np.diff(plan.starts) >= 0).all()
+    for d in range(plan.ndev):
+        ids = np.arange(plan.starts[d], plan.starts[d + 1])
+        # interior/boundary is a PARTITION of the shard's range
+        both = np.union1d(plan.interior[d], plan.boundary[d])
+        assert np.array_equal(both, ids), (gname, ndev, d)
+        assert np.intersect1d(plan.interior[d], plan.boundary[d]).size == 0
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("ndev", [2, 8])
+def test_plan_halo_send_lists_cover_cross_edges(gname, ndev):
+    """Every cross-partition edge endpoint sits in exactly ONE send list."""
+    g = GRAPHS[gname]()
+    plan = PartitionedCSR.from_graph(g, ndev)
+    owner = plan.owners()
+    src, dst = g.edges()
+    cross = owner[src] != owner[dst]
+    # membership count per vertex across all send (=boundary) lists
+    in_sends = np.zeros(g.n, dtype=np.int64)
+    for b in plan.boundary:
+        np.add.at(in_sends, b, 1)
+    # each cross endpoint appears in exactly one send list (its owner's) ...
+    endpoints = np.unique(np.concatenate([src[cross], dst[cross]]))
+    assert (in_sends[endpoints] == 1).all(), (gname, ndev)
+    for d, b in enumerate(plan.boundary):
+        assert (owner[b] == d).all()
+    # ... and a vertex with NO cross edge is in no send list
+    quiet = np.setdiff1d(np.arange(g.n), endpoints)
+    assert (in_sends[quiet] == 0).all()
+    # recv sets are exactly the remote endpoints each device reads
+    for d in range(plan.ndev):
+        expect = np.unique(dst[(owner[src] == d) & cross])
+        assert np.array_equal(np.sort(plan.recv[d]), expect), (gname, ndev, d)
+
+
+@pytest.mark.parametrize("ndev", [2, 5])
+def test_plan_two_hop_boundary_covers_square_cross_edges(ndev):
+    """two_hop plans mark every vertex whose G²-neighborhood crosses."""
+    g = GRAPHS["er"]()
+    plan = PartitionedCSR.from_graph(g, ndev, boundary_mode="two_hop")
+    owner = plan.owners()
+    g2 = g.square()
+    src, dst = g2.edges()
+    cross = owner[src] != owner[dst]
+    in_sends = np.zeros(g.n, dtype=np.int64)
+    for b in plan.boundary:
+        np.add.at(in_sends, b, 1)
+    assert (in_sends[np.unique(src[cross])] == 1).all()
+
+
+@pytest.mark.parametrize("ndev", [2, 4])
+def test_plan_bipartite_boundary_covers_conflicts(ndev):
+    bg = _bipartite()
+    plan = PartitionedCSR.from_bipartite(bg, ndev)
+    owner = plan.owners()
+    cg = bg.column_conflict_graph()
+    src, dst = cg.edges()
+    cross = owner[src] != owner[dst]
+    in_sends = np.zeros(bg.n_cols, dtype=np.int64)
+    for b in plan.boundary:
+        np.add.at(in_sends, b, 1)
+    assert (in_sends[np.unique(src[cross])] == 1).all()
+    for d in range(plan.ndev):
+        ids = np.arange(plan.starts[d], plan.starts[d + 1])
+        both = np.union1d(plan.interior[d], plan.boundary[d])
+        assert np.array_equal(both, ids)
+
+
+def test_plan_degree_balance():
+    """Ranges balance degree+1 weight, not raw vertex counts."""
+    g = GRAPHS["powerlaw"]()
+    ndev = 4
+    plan = PartitionedCSR.from_graph(g, ndev)
+    w = g.degrees.astype(np.int64) + 1
+    loads = [int(w[plan.starts[d]:plan.starts[d + 1]].sum())
+             for d in range(ndev)]
+    mean = sum(loads) / ndev
+    # contiguity caps the achievable balance; 2x mean is the sanity band
+    assert max(loads) <= 2 * mean + int(w.max())
+
+
+# --------------------------------------------------------------------------
+# single-device parity: sharded ≡ fused ragged, bit-for-bit + accounting
+# (satellite: padded_work gather-cell regression vs the ragged engine)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_sharded_one_device_equals_fused_ragged(gname):
+    g = GRAPHS[gname]()
+    r_sh = color_distributed(g)
+    r_f = color_data_driven(g, mode="fused")
+    assert is_valid_coloring(g, r_sh.colors)
+    assert (r_sh.colors == r_f.colors).all()
+    assert r_sh.iterations == r_f.iterations
+    # the pre-§13 engine reported padded_work = iters * n_pad (lanes, not
+    # gather cells); the rewrite must match the ragged engine's accounting
+    assert r_sh.work_items == r_f.work_items
+    assert r_sh.padded_work == r_f.padded_work
+    assert r_sh.converged
+    assert r_sh.algorithm.startswith("sharded_sgr_")
+
+
+def test_sharded_padded_work_counts_gather_cells():
+    """Regression: padded_work is lanes × tile width, not lanes alone."""
+    g = GRAPHS["er"]()
+    r = color_distributed(g, tail_serial=None, tiling=None)
+    spec_steps = r.iterations - 1  # bootstrap is materialized, never dispatched
+    dmax = g.max_degree
+    assert r.padded_work == spec_steps * g.n * dmax
+    assert r.padded_work != r.iterations * g.n  # the old buggy formula
+
+
+def test_sharded_result_reports_halo_field():
+    g = GRAPHS["grid"]()
+    r = color_distributed(g)
+    assert isinstance(r, ColoringResult)
+    assert r.halo_bytes_per_step >= 0
+    # one device: both all-gather operands are the device's own — the halo
+    # field still reports the (trivial) exchanged buffer, bounded well
+    # under the old 2 full color arrays per step
+    assert r.halo_bytes_per_step < 8 * g.n
+    # single-device engines report 0
+    assert color_data_driven(g).halo_bytes_per_step == 0
+
+
+# --------------------------------------------------------------------------
+# api plumbing + error paths (satellite: registry/engine error-path tests)
+# --------------------------------------------------------------------------
+
+def test_api_engine_sharded_reachable_and_falls_back():
+    g = GRAPHS["er"]()
+    r = repro.color(g, "data_driven", engine="sharded")
+    base = color_data_driven(g)
+    assert (r.colors == base.colors).all()  # 1 device: ragged fallback
+
+
+def test_api_engine_sharded_unknown_heuristic_matches_ragged_error():
+    g = GRAPHS["grid"]()
+    with pytest.raises(ValueError) as exc_ragged:
+        repro.color(g, "data_driven", engine="ragged", heuristic="nope")
+    with pytest.raises(ValueError) as exc_sharded:
+        repro.color(g, "data_driven", engine="sharded", heuristic="nope")
+    # the sharded entry point raises the SAME message as the ragged path
+    with pytest.raises(ValueError) as exc_direct:
+        color_distributed(g, heuristic="nope")
+    assert str(exc_sharded.value) == str(exc_ragged.value)
+    assert str(exc_direct.value) == str(exc_ragged.value)
+    assert "unknown heuristic" in str(exc_direct.value)
+
+
+def test_unknown_engine_lists_sharded():
+    with pytest.raises(ValueError, match="sharded"):
+        color_data_driven(GRAPHS["grid"](), engine="nope")
+
+
+def test_sharded_rejects_unsupported_schedule_opts():
+    """Options the sharded schedule cannot honor raise on ANY device count
+    (silently dropping them would make colors depend on the mesh size)."""
+    from repro.d2 import color_distance2
+
+    g = GRAPHS["grid"]()
+    with pytest.raises(ValueError, match="coarsen"):
+        color_data_driven(g, engine="sharded", coarsen_lanes=32)
+    with pytest.raises(ValueError, match="coarsen"):
+        color_data_driven(g, engine="sharded", coarsen_ff=2)
+    with pytest.raises(ValueError, match="use_kernel"):
+        color_data_driven(g, engine="sharded", use_kernel=True)
+    with pytest.raises(ValueError, match="coarsen"):
+        color_distance2(g, engine="sharded", coarsen=2)
+    with pytest.raises(ValueError, match="use_kernel"):
+        color_distance2(g, engine="sharded", use_kernel=True)
+    with pytest.raises(ValueError, match="devices"):
+        repro.color_batch([g], algorithm="fused", devices=[object()])
+
+
+def test_d2_and_bipartite_engine_validation():
+    from repro.d2 import color_bipartite, color_distance2
+
+    g = GRAPHS["grid"]()
+    with pytest.raises(ValueError, match="unknown engine"):
+        color_distance2(g, engine="nope")
+    with pytest.raises(ValueError, match="unknown engine"):
+        color_bipartite(_bipartite(), engine="nope")
+    # sharded on one device falls back to the ragged engine, bit-identical
+    r = color_distance2(g, engine="sharded")
+    base = color_distance2(g)
+    assert (r.colors == base.colors).all()
+
+
+def test_color_batch_engine_validation():
+    graphs = [GRAPHS["er"](), GRAPHS["grid"]()]
+    with pytest.raises(ValueError, match="unknown batch engine"):
+        repro.color_batch(graphs, algorithm="fused", engine="nope")
+    base = repro.color_batch(graphs, algorithm="fused")
+    sh = repro.color_batch(graphs, algorithm="fused", engine="sharded")
+    for rb, rs in zip(base, sh):
+        assert (rb.colors == rs.colors).all()  # 1 device: same batched path
+
+
+# --------------------------------------------------------------------------
+# TwoHopRows over a PartitionedCSR shard (host-checkable slicing identity)
+# --------------------------------------------------------------------------
+
+def test_twohop_rows_shard_offset_matches_full():
+    import jax.numpy as jnp
+
+    from repro.d2.coloring import TwoHopRows
+
+    g = GRAPHS["grid"]()
+    plan = PartitionedCSR.from_graph(g, 3, boundary_mode="two_hop")
+    adj_np = g.padded_adjacency()
+    full = TwoHopRows(jnp.asarray(adj_np), jnp.asarray(adj_np))
+    sliced = plan.stack_rows(adj_np, fill=g.n)
+    for d in range(plan.ndev):
+        s, e = int(plan.starts[d]), int(plan.starts[d + 1])
+        if e == s:
+            continue
+        shard = TwoHopRows(jnp.asarray(sliced[d]), jnp.asarray(adj_np),
+                           start=s, n_colored=g.n)
+        ids = jnp.asarray(
+            np.concatenate([np.arange(s, e, dtype=np.int32)[:8], [g.n]]))
+        assert (np.asarray(shard.rows(ids)) == np.asarray(full.rows(ids))).all()
