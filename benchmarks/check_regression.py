@@ -1,0 +1,157 @@
+"""CI quality/perf regression gate over ``BENCH_coloring*.json`` documents.
+
+Before this gate, the bench-smoke CI step only ``cat``-ed the JSON — an
+invalid coloring or a color-count regression sailed through green.  Now:
+
+    python benchmarks/check_regression.py BENCH_coloring.json [more.json ...] \
+        --baseline benchmarks/baseline_tiny.json
+
+fails (exit 1) when any produced record
+
+* carries ``"valid": false`` — a broken coloring is never acceptable;
+* carries an ``"error"`` — an algorithm that crashed used to pass silently;
+* uses MORE colors (or Jacobian ``groups``) than the checked-in baseline
+  records for the same (algorithm, graph) — quality regression;
+* is a ``dynamic`` churn record whose ``work_ratio`` falls below the
+  baseline's ``min_work_ratio`` floor — the §14 frontier-proportionality
+  guarantee regressed to n-proportional work.
+
+Color comparisons only apply when the document's ``scale`` matches the
+baseline's (the weekly ``--scale small`` run still gets validity/error
+checking); records missing from the baseline are reported as notes, not
+failures, so adding an algorithm never blocks CI.  Refresh the baseline
+after an intentional quality change with::
+
+    python benchmarks/check_regression.py --write-baseline \
+        BENCH_coloring.json BENCH_coloring_dynamic.json \
+        -o benchmarks/baseline_tiny.json
+
+Pure stdlib (no jax/numpy) so the gate itself is unit-testable in
+milliseconds (``tests/test_regression_gate.py``).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+DEFAULT_BASELINE = "benchmarks/baseline_tiny.json"
+MIN_WORK_RATIO = 3.0  # conservative CI floor; the §14 test asserts >= 5
+
+
+def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
+    """(failures, notes) for one produced BENCH document vs the baseline."""
+    fails: list[str] = []
+    notes: list[str] = []
+    same_scale = doc.get("scale") == baseline.get("scale")
+    if not same_scale:
+        notes.append(
+            f"scale {doc.get('scale')} != baseline {baseline.get('scale')}: "
+            "validity checked, color counts not compared")
+
+    def quality(kind: str, alg: str, name: str, rec: dict, field: str,
+                base_rec: dict | None):
+        where = f"{kind} {alg + '/' if alg else ''}{name}"
+        if "error" in rec:
+            fails.append(f"{where}: errored: {rec['error']}")
+            return
+        if rec.get("valid") is False:
+            fails.append(f"{where}: INVALID coloring")
+        if base_rec is None:
+            if same_scale:
+                notes.append(f"{where}: not in baseline (new?)")
+            return
+        if same_scale and field in rec and field in base_rec:
+            if rec[field] > base_rec[field]:
+                fails.append(
+                    f"{where}: {field} regressed "
+                    f"{base_rec[field]} -> {rec[field]}")
+
+    for alg, per_graph in doc.get("algorithms", {}).items():
+        base_alg = baseline.get("algorithms", {}).get(alg, {})
+        for name, rec in per_graph.items():
+            quality("algorithm", alg, name, rec, "colors",
+                    base_alg.get(name))
+    for name, rec in doc.get("bipartite", {}).items():
+        quality("bipartite", "", name, rec, "groups",
+                baseline.get("bipartite", {}).get(name))
+    for name, rec in doc.get("dynamic", {}).items():
+        base_rec = baseline.get("dynamic", {}).get(name)
+        quality("dynamic", "", name, rec, "colors", base_rec)
+        floor = (base_rec or {}).get("min_work_ratio", MIN_WORK_RATIO)
+        if "work_ratio" in rec and rec["work_ratio"] < floor:
+            fails.append(
+                f"dynamic {name}: work_ratio {rec['work_ratio']} below the "
+                f"frontier-proportionality floor {floor}")
+    return fails, notes
+
+
+def make_baseline(docs: list[dict]) -> dict:
+    """Distill produced documents into the checked-in baseline shape."""
+    out: dict = {"schema": 4, "scale": None, "algorithms": {},
+                 "bipartite": {}, "dynamic": {}}
+    for doc in docs:
+        out["scale"] = doc.get("scale", out["scale"])
+        for alg, per_graph in doc.get("algorithms", {}).items():
+            slot = out["algorithms"].setdefault(alg, {})
+            for name, rec in per_graph.items():
+                if "colors" in rec:
+                    slot[name] = {"colors": rec["colors"]}
+        for name, rec in doc.get("bipartite", {}).items():
+            if "groups" in rec:
+                out["bipartite"][name] = {"groups": rec["groups"]}
+        for name, rec in doc.get("dynamic", {}).items():
+            if "colors" in rec:
+                out["dynamic"][name] = {
+                    "colors": rec["colors"],
+                    "min_work_ratio": MIN_WORK_RATIO,
+                }
+    return out
+
+
+def main(argv: list[str]) -> int:
+    args = list(argv)
+    write = "--write-baseline" in args
+    if write:
+        args.remove("--write-baseline")
+    out_path = DEFAULT_BASELINE
+    if "-o" in args:
+        i = args.index("-o")
+        out_path = args[i + 1]
+        del args[i : i + 2]
+    baseline_path = DEFAULT_BASELINE
+    if "--baseline" in args:
+        i = args.index("--baseline")
+        baseline_path = args[i + 1]
+        del args[i : i + 2]
+    if not args:
+        print(__doc__)
+        return 2
+    docs = []
+    for path in args:
+        with open(path) as f:
+            docs.append((path, json.load(f)))
+    if write:
+        baseline = make_baseline([d for _, d in docs])
+        with open(out_path, "w") as f:
+            json.dump(baseline, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote baseline {out_path} from {len(docs)} document(s)")
+        return 0
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    bad = False
+    for path, doc in docs:
+        fails, notes = check(doc, baseline)
+        for msg in notes:
+            print(f"NOTE  {path}: {msg}")
+        for msg in fails:
+            print(f"FAIL  {path}: {msg}")
+        if fails:
+            bad = True
+        else:
+            print(f"OK    {path}: no regressions vs {baseline_path}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

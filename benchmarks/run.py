@@ -20,7 +20,16 @@ top-level ``engine`` field plus per-record ``engine`` /
 ``halo_bytes_per_step`` (§13 halo traffic; 0 off the sharded engine).  Run
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise
 ``sharded`` on simulated devices — CI's sharded bench-smoke artifact is
-``BENCH_coloring_sharded.json``.
+``BENCH_coloring_sharded.json``.  ``--engine sharded`` REFUSES to run on a
+single-device host (the engine would silently fall back to ``ragged`` and
+the recorded numbers would come from the wrong engine).
+
+Schema 4 adds ``--engine dynamic`` (§14): instead of the algorithm matrix
+the document carries a ``dynamic`` section of churn records — per suite
+graph, incremental ``session.recolor()`` vs cold re-color work/wall under
+1% streaming edge churn (``benchmarks/dynamic.py``).  CI's artifact is
+``BENCH_coloring_dynamic.json``; ``benchmarks/check_regression.py`` gates
+every produced document against ``benchmarks/baseline_tiny.json``.
 """
 from __future__ import annotations
 
@@ -68,7 +77,7 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged") -> dict:
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
     graphs = {name: build_graph(name, json_scale) for name in JSON_GRAPHS}
     doc = {
-        "schema": 3,
+        "schema": 4,
         "scale": json_scale,
         "engine": engine,
         "graphs": {
@@ -118,7 +127,24 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged") -> dict:
     return doc
 
 
-ENGINES = ("ragged", "padded", "classic", "sharded")
+ENGINES = ("ragged", "padded", "classic", "sharded", "dynamic")
+
+
+def bench_dynamic_json_doc(path: str = JSON_PATH) -> dict:
+    """The ``--engine dynamic`` document: §14 churn records, no matrix."""
+    from benchmarks.dynamic import bench_dynamic_json
+
+    json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
+    doc = {
+        "schema": 4,
+        "scale": json_scale,
+        "engine": "dynamic",
+        "dynamic": bench_dynamic_json(json_scale),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc
 
 
 def main() -> None:
@@ -140,13 +166,28 @@ def main() -> None:
         if engine not in ENGINES:
             raise SystemExit(
                 f"unknown --engine {engine!r}; options: {list(ENGINES)}")
+    if engine == "sharded":
+        # the api would silently fall back to the single-device ragged
+        # engine — refuse instead, so recorded bench numbers can never come
+        # from the wrong engine (CI forces a simulated fleet via XLA_FLAGS)
+        import jax
+
+        if jax.device_count() <= 1:
+            raise SystemExit(
+                "--engine sharded needs a multi-device host but only "
+                f"{jax.device_count()} device is visible; run under "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=8 (or on "
+                "real multi-device hardware) so the sharded engine actually "
+                "executes instead of falling back to ragged")
     json_only = "--json-only" in args
     if not json_only:
         from benchmarks.d2 import D2_BENCHES
+        from benchmarks.dynamic import DYNAMIC_BENCHES
         from benchmarks.paper import ALL_BENCHES
 
         print("name,us_per_call,derived", flush=True)
-        for bench in list(ALL_BENCHES) + list(D2_BENCHES):
+        for bench in (list(ALL_BENCHES) + list(D2_BENCHES)
+                      + list(DYNAMIC_BENCHES)):
             t0 = time.time()
             try:
                 rows = bench()
@@ -157,7 +198,10 @@ def main() -> None:
                 print(f"{name},{us:.1f},{derived}", flush=True)
             print(f"# {bench.__name__} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
-    bench_coloring_json(engine=engine)
+    if engine == "dynamic":
+        bench_dynamic_json_doc()
+    else:
+        bench_coloring_json(engine=engine)
     print(f"# wrote {JSON_PATH} (engine={engine})", file=sys.stderr)
 
 

@@ -12,7 +12,8 @@ README.md and DESIGN.md.
 
 __version__ = "1.1.0"
 
-_API_NAMES = ("color", "color_batch", "algorithms", "get_algorithm", "register")
+_API_NAMES = ("color", "color_batch", "algorithms", "get_algorithm",
+              "register", "open_session")
 
 
 def __getattr__(name):

@@ -22,6 +22,10 @@ Registered names (see ``algorithms()``):
 * ``distance2``   — distance-2 SGR (``repro.d2``; same super-step on G²)
 * ``bipartite``   — bipartite partial coloring of a ``BipartiteGraph``
                     column side (the Jacobian-compression workload)
+* ``dynamic``     — cold path of the streaming incremental engine
+                    (``repro.dynamic``; ``open_session`` is the streaming
+                    entry point — mutate with ``apply_delta`` and repair
+                    with frontier-sized ``recolor()`` calls, §14)
 
 ``color_batch`` colors MANY graphs: for ``algorithm="fused"`` (distance-1)
 and ``algorithm="distance2"`` it dispatches to the batched multi-graph
@@ -43,7 +47,8 @@ if TYPE_CHECKING:  # imports stay lazy at runtime to avoid core<->api cycles
     from repro.core.coloring import ColoringResult
     from repro.core.csr import CSRGraph
 
-__all__ = ["register", "color", "color_batch", "algorithms", "get_algorithm"]
+__all__ = ["register", "color", "color_batch", "algorithms", "get_algorithm",
+           "open_session"]
 
 _REGISTRY: dict[str, Callable] = {}
 
@@ -64,6 +69,14 @@ def _ensure_registered() -> None:
     # Importing the packages runs every @register decorator in their modules.
     import repro.core  # noqa: F401
     import repro.d2  # noqa: F401
+    import repro.dynamic  # noqa: F401
+
+
+def open_session(rows, cols=None, **opts):
+    """Open a streaming ``ColoringSession`` (lazy alias of ``repro.dynamic``)."""
+    from repro.dynamic import open_session as _open_session
+
+    return _open_session(rows, cols, **opts)
 
 
 def algorithms() -> tuple[str, ...]:

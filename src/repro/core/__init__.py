@@ -1,7 +1,7 @@
 """Core graph-coloring engine — the paper's contribution in JAX."""
-from repro.core.batch import (GraphBatch, batched_ragged_step,
+from repro.core.batch import (GraphBatch, SessionBatch, batched_ragged_step,
                               batched_sgr_step, color_batch_fused,
-                              color_batch_sharded)
+                              color_batch_sharded, open_session_batch)
 from repro.core.coloring import ColoringResult, color_data_driven, color_fused
 from repro.core.csr import (CSRGraph, DeviceCSR, DeviceGraph, PartitionedCSR,
                             auto_tile_thresholds, csr_from_edges, next_pow2)
@@ -27,6 +27,8 @@ __all__ = [
     "color_fused",
     "color_batch_fused",
     "color_batch_sharded",
+    "SessionBatch",
+    "open_session_batch",
     "batched_ragged_step",
     "batched_sgr_step",
     "color_topology",

@@ -51,8 +51,9 @@ from repro.core.coloring import (
 )
 from repro.core.csr import CSRGraph, next_pow2
 
-__all__ = ["GraphBatch", "batched_sgr_step", "batched_ragged_step",
-           "color_batch_fused", "color_batch_sharded"]
+__all__ = ["GraphBatch", "SessionBatch", "batched_sgr_step",
+           "batched_ragged_step", "color_batch_fused", "color_batch_sharded",
+           "open_session_batch"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -340,6 +341,53 @@ def color_batch_fused(
             algorithm=algo,
         ))
     return out
+
+
+class SessionBatch:
+    """Per-graph ``ColoringSession``s for B-graph churn (§14 serving path).
+
+    The streaming analogue of ``color_batch_fused``: B user graphs are held
+    open as persistent sessions, mutations arrive per graph
+    (``apply_delta(b, ...)``), and one ``recolor()`` sweep repairs exactly
+    the sessions whose graphs are dirty — clean graphs return their
+    committed coloring as a zero-work no-op, so a sweep's total work is
+    proportional to the *churned* frontier across the batch, not to
+    ``Σ n_i``.  Sessions are independent (their frontiers never interact),
+    so per-graph recoloring is exact, and each graph's colors match what a
+    standalone ``ColoringSession`` fed the same deltas would hold.
+    """
+
+    def __init__(self, graphs: "Iterable[CSRGraph]", **opts):
+        from repro.dynamic import ColoringSession  # lazy: dynamic -> core
+
+        self.sessions = [ColoringSession(g, **opts) for g in graphs]
+
+    @property
+    def B(self) -> int:
+        return len(self.sessions)
+
+    def apply_delta(self, b: int, **delta) -> np.ndarray:
+        """Mutate graph ``b``; returns the ids it dirtied (see ColoringSession)."""
+        return self.sessions[b].apply_delta(**delta)
+
+    def dirty(self) -> list[int]:
+        """Indices of graphs with a pending (non-empty) frontier."""
+        return [b for b, s in enumerate(self.sessions) if s.frontier().size]
+
+    def recolor(self, *, full: bool = False) -> list[ColoringResult]:
+        """Repair every dirty session; one (possibly no-op) result per graph."""
+        return [s.recolor(full=full) for s in self.sessions]
+
+    def results(self) -> list[ColoringResult]:
+        return [s.result for s in self.sessions]
+
+    def validate(self) -> bool:
+        return all(s.validate() for s in self.sessions)
+
+
+def open_session_batch(graphs: "Iterable[CSRGraph]", **opts) -> SessionBatch:
+    """Open per-graph streaming sessions over ``graphs`` (§14 churn serving)."""
+    return SessionBatch(graphs, **opts)
 
 
 _EMPTY = CSRGraph(np.zeros(1, np.int64), np.zeros(0, np.int32))

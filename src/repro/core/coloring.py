@@ -468,6 +468,9 @@ def run_ragged_engine(
     max_iters: int,
     algorithm: str = "data_driven_sgr",
     pack_degrees: bool = False,
+    colors_init=None,
+    stall_serializes_all: bool = True,
+    class_counts=None,
 ) -> ColoringResult:
     """Drive the rotated super-step to convergence over degree-tiled classes.
 
@@ -480,28 +483,47 @@ def run_ragged_engine(
     ``serial_tail_step`` over the provider's full-width rows.  ``mode`` picks
     the host-loop (``workefficient``) or single-device-program (``fused``)
     realization of the *same* schedule — colors are bit-identical.
+
+    ``colors_init`` warm-starts the engine (§14 incremental recoloring): a
+    pre-colored ``(n + 1,)`` extended array whose non-worklist entries are
+    FROZEN snapshot context — ``classes`` then need not partition all
+    vertices, only the live frontier, and the work accounting charges that
+    frontier (not n).  ``stall_serializes_all=False`` keeps the stall tail's
+    scope to the live worklist (the cold default discards the speculation
+    and re-greedies the whole graph, which would turn a frontier-sized
+    recoloring into an O(n) one).  ``class_counts`` gives each class's TRUE
+    live count when its worklist buffer carries trailing sentinel padding
+    (callers pad to a power of two so jit cache keys repeat across calls);
+    sentinel lanes are inert everywhere, so only the accounting and the
+    tail/stall thresholds need the honest numbers.
     """
-    colors_ext = jnp.zeros((n + 1,), dtype=jnp.int32)
     caps0 = [int(c.shape[0]) for c in classes]
-    # Bootstrap identity: with an unchunked worklist the first rotated step
-    # FirstFits every vertex against an all-zero tile — everyone takes color 1
-    # and the worklist is unchanged.  Materialize that constant instead of
-    # dispatching a full-width gather for it.
-    skip_bootstrap = coarsen <= 1 and (
-        coarsen_lanes is None or coarsen_lanes >= max(caps0, default=1))
+    counts_init = (caps0 if class_counts is None
+                   else [int(c) for c in class_counts])
     boot_iters = 0
-    if skip_bootstrap and max_iters >= 1:
-        colors_ext = jnp.where(
-            jnp.arange(n + 1, dtype=jnp.int32) < n, 1, 0
-        ).astype(jnp.int32)
-        boot_iters = 1
+    if colors_init is not None:
+        colors_ext = jnp.asarray(colors_init, dtype=jnp.int32)
+    else:
+        colors_ext = jnp.zeros((n + 1,), dtype=jnp.int32)
+        # Bootstrap identity: with an unchunked worklist the first rotated
+        # step FirstFits every vertex against an all-zero tile — everyone
+        # takes color 1 and the worklist is unchanged.  Materialize that
+        # constant instead of dispatching a full-width gather for it.  (Never
+        # valid on a warm start: tiles read frozen colors, not zeros.)
+        skip_bootstrap = coarsen <= 1 and (
+            coarsen_lanes is None or coarsen_lanes >= max(caps0, default=1))
+        if skip_bootstrap and max_iters >= 1:
+            colors_ext = jnp.where(
+                jnp.arange(n + 1, dtype=jnp.int32) < n, 1, 0
+            ).astype(jnp.int32)
+            boot_iters = 1
 
     if mode == "fused":
         return _run_ragged_fused(
             n, provider, deg_ext, classes, tile_widths, acc_widths,
             tail_width, colors_ext, boot_iters, heuristic, kind, use_kernel,
             coarsen, coarsen_lanes, tail_enabled, tail_threshold, max_iters,
-            algorithm, pack_degrees,
+            algorithm, pack_degrees, counts_init, stall_serializes_all,
         )
     if mode != "workefficient":
         raise ValueError(f"unknown mode {mode!r}")
@@ -509,7 +531,7 @@ def run_ragged_engine(
     K = len(classes)
     caps = caps0
     wls = [jnp.asarray(c) for c in classes]
-    counts = list(caps)
+    counts = list(counts_init)
     iters = boot_iters
     work = n if boot_iters else 0
     padded = 0
@@ -544,7 +566,7 @@ def run_ragged_engine(
         total = sum(counts)
     converged = total == 0
     if total > 0 and iters < max_iters and tail_enabled:
-        if stalled:
+        if stalled and stall_serializes_all:
             # speculation failed to make progress — discard it and run one
             # clean largest-degree-first sequential greedy over the graph
             tail_np = np.arange(n, dtype=np.int32)
@@ -556,7 +578,7 @@ def run_ragged_engine(
             tail_np[:total] = live
         tail_wl = order_tail(jnp.asarray(tail_np), deg_ext)
         colors_ext = provider_tail(provider, colors_ext, tail_wl, kind=kind)
-        work += n if stalled else total
+        work += n if stalled and stall_serializes_all else total
         padded += int(tail_wl.shape[0]) * tail_width
         iters += 1
         converged = True
@@ -572,7 +594,7 @@ def run_ragged_engine(
 def _fused_spec_loop(provider, deg_ext, colors_ext, wls, counts, thr, *,
                      tile_widths, heuristic, kind, use_kernel, chunks,
                      tail_enabled, max_iters, boot_iters=0,
-                     pack_degrees=False):
+                     pack_degrees=False, prev0=None):
     """The speculative phase as one ``lax.while_loop`` device program."""
     n = colors_ext.shape[0] - 1
     K = len(wls)
@@ -600,7 +622,7 @@ def _fused_spec_loop(provider, deg_ext, colors_ext, wls, counts, thr, *,
         return (colors_ext, new_wls, new_counts, it + 1, work + total, prev)
 
     state = (colors_ext, wls, counts, jnp.int32(boot_iters), jnp.int32(0),
-             jnp.int32(n))
+             jnp.int32(n if prev0 is None else prev0))
     return lax.while_loop(cond, body, state)
 
 
@@ -608,15 +630,20 @@ def _run_ragged_fused(
     n, provider, deg_ext, classes, tile_widths, acc_widths, tail_width,
     colors_ext, boot_iters, heuristic, kind, use_kernel, coarsen,
     coarsen_lanes, tail_enabled, tail_threshold, max_iters, algorithm,
-    pack_degrees=False,
+    pack_degrees=False, counts_init=None, stall_serializes_all=True,
 ):
     K = len(classes)
     caps = [int(c.shape[0]) for c in classes]
+    # cold runs partition all n vertices with exact-length worklists, so
+    # init_total == n there; warm starts (§14) pass the true live counts of
+    # their sentinel-padded frontier buffers and charge those instead
+    counts_init = caps if counts_init is None else counts_init
+    init_total = sum(counts_init)
     chunks = [coarsen] * K
     if coarsen_lanes:
         chunks = [max(1, math.ceil(c / coarsen_lanes)) for c in caps]
     wls0 = tuple(jnp.asarray(c) for c in classes)
-    counts0 = tuple(jnp.int32(c) for c in caps)
+    counts0 = tuple(jnp.int32(c) for c in counts_init)
     colors_ext, wls, counts, it, work, prev = _fused_spec_loop(
         provider, deg_ext, colors_ext, wls0, counts0,
         jnp.int32(tail_threshold),
@@ -624,22 +651,23 @@ def _run_ragged_fused(
         use_kernel=use_kernel, chunks=tuple(chunks),
         tail_enabled=tail_enabled, max_iters=max_iters,
         boot_iters=boot_iters, pack_degrees=pack_degrees,
+        prev0=None if init_total == n else jnp.int32(init_total),
     )
     total = int(sum(int(c) for c in counts))
     iters = int(it)
-    work_items = int(work) + n
+    work_items = int(work) + init_total
     padded = (iters - boot_iters) * sum(c * w for c, w in zip(caps, acc_widths))
     converged = total == 0
     if total > 0 and iters < max_iters and tail_enabled:
         stalled = total > tail_threshold and bool(
             _stalled(iters, total, int(prev)))
-        if stalled:
+        if stalled and stall_serializes_all:
             tail_wl = order_tail(jnp.arange(n, dtype=jnp.int32), deg_ext)
         else:
             combined = jnp.concatenate(list(wls)) if K > 1 else wls[0]
             tail_wl = order_tail(combined, deg_ext)
         colors_ext = provider_tail(provider, colors_ext, tail_wl, kind=kind)
-        work_items += n if stalled else total
+        work_items += n if stalled and stall_serializes_all else total
         padded += int(tail_wl.shape[0]) * tail_width
         iters += 1
         converged = True

@@ -1,0 +1,13 @@
+"""Streaming dynamic-graph coloring engine (DESIGN.md §14).
+
+``DeltaCSR`` (batched edge/vertex insert+delete as an overlay over the CSR
+base, with periodic compaction) + ``ColoringSession`` (incremental
+recoloring of the dirty frontier on the §12 rotated super-step, all other
+colors frozen as snapshot context).  Registered as algorithm ``"dynamic"``.
+"""
+from repro.dynamic.churn import churn_delta
+from repro.dynamic.delta import DeltaCSR
+from repro.dynamic.session import ColoringSession, color_dynamic, open_session
+
+__all__ = ["ColoringSession", "DeltaCSR", "churn_delta", "color_dynamic",
+           "open_session"]

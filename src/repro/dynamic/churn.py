@@ -1,0 +1,31 @@
+"""Shared churn-workload generator for the §14 streaming engine.
+
+One implementation of the sliding-window edge stream used by the churn
+benchmark (``benchmarks/dynamic.py``), the acceptance tests
+(``tests/test_dynamic.py``), and the demo (``examples/stream_serve.py``) —
+so the workload the CI gate measures is exactly the one the tests and the
+example exercise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["churn_delta"]
+
+
+def churn_delta(g, frac: float, rng) -> tuple[tuple, tuple]:
+    """One churn round: ``(remove_edges, add_edges)`` batches for ``g``.
+
+    Deletes ``frac`` of the undirected edges (chosen by ``rng``) and draws
+    the same number of uniform random pairs to insert (self-loops and
+    duplicates are dropped by the ``DeltaCSR`` mutation layer, so the
+    effective insert count is slightly below the delete count on dense
+    graphs — the stream drifts sparse, like real churn).
+    """
+    src, dst = g.edges()
+    und = src < dst
+    es, ed = src[und], dst[und]
+    k = max(1, int(frac * es.size))
+    drop = rng.permutation(es.size)[:k]
+    add = (rng.integers(0, g.n, k), rng.integers(0, g.n, k))
+    return (es[drop], ed[drop]), add

@@ -1,0 +1,229 @@
+"""``DeltaCSR`` — a batched mutation overlay over the host CSR graph (§14).
+
+CSR is the wrong structure to mutate in place (a row's length change shifts
+every later offset), so mutations accumulate in an *overlay* against an
+immutable compacted base:
+
+* the base is a ``CSRGraph`` plus its sorted directed-edge key array
+  ``(u << 32) | v`` (int64) — row-sorted CSR makes the keys sorted for free;
+* ``_add`` holds keys present now but absent from the base,
+  ``_del`` keys present in the base but deleted since — both sorted, both
+  disjoint from each other, with ``_add ∩ base = ∅`` and ``_del ⊆ base``
+  as maintained invariants, so the current edge set is always
+  ``(base ∖ _del) ∪ _add`` and every membership question is a vectorized
+  ``O(Δ log m)`` sorted-array operation;
+* ``compact()`` folds the overlay back into a fresh base — a sorted
+  set-merge, NOT an ``O(m log m)`` re-sort — and fires automatically once the
+  overlay outgrows ``compact_frac`` of the base (the snapshot build the
+  engine reads is ``O(m)`` either way, so an unbounded overlay only adds
+  set-op cost, never corrupts anything).
+
+Mutations are **batched and vectorized**: each call takes edge *arrays*
+(symmetrized, self-loops dropped, duplicates ignored) and returns the vertex
+ids whose neighborhoods actually changed — the dirty frontier the
+``ColoringSession`` recolors.  Adding an edge that already exists, or
+removing one that doesn't, is a no-op and dirties nobody.
+
+Vertex semantics keep ids stable (colors are indexed by vertex id, so
+renumbering would invalidate every frozen color): ``add_vertices`` appends
+isolated vertices at the end of the id space, ``remove_vertices`` deletes
+all incident edges and leaves the slot behind as an isolated (degree-0)
+vertex.  The id space therefore only grows; compaction never renumbers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.csr import CSRGraph, _gather_ragged
+
+__all__ = ["DeltaCSR"]
+
+_LO32 = np.int64(0xFFFFFFFF)
+_EMPTY_KEYS = np.zeros(0, np.int64)
+_EMPTY_IDS = np.zeros(0, np.int32)
+
+
+def _graph_keys(g: CSRGraph) -> np.ndarray:
+    """Sorted directed-edge keys of a CSR graph (sorted rows => sorted keys)."""
+    src, dst = g.edges()
+    return (src.astype(np.int64) << 32) | dst.astype(np.int64)
+
+
+def _ends(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    return (keys >> 32), (keys & _LO32)
+
+
+def _clean_pairs(src, dst, n: int) -> np.ndarray:
+    """Unique symmetrized directed keys of an edge batch (self-loops dropped)."""
+    src = np.asarray(src, dtype=np.int64).ravel()
+    dst = np.asarray(dst, dtype=np.int64).ravel()
+    if src.shape != dst.shape:
+        raise ValueError(
+            f"edge batch endpoint arrays differ in length: "
+            f"{src.shape[0]} vs {dst.shape[0]}")
+    if src.size == 0:
+        return _EMPTY_KEYS
+    lo = min(int(src.min()), int(dst.min()))
+    hi = max(int(src.max()), int(dst.max()))
+    if lo < 0 or hi >= n:
+        raise ValueError(
+            f"edge endpoint out of range [0, {n}): saw {lo if lo < 0 else hi}")
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    u = np.concatenate([src, dst])
+    v = np.concatenate([dst, src])
+    return np.unique((u << 32) | v)
+
+
+class DeltaCSR:
+    """Mutable graph = immutable CSR base + sorted add/delete key overlay."""
+
+    def __init__(self, base: CSRGraph, *, compact_frac: float = 0.25):
+        self._base = base
+        self._base_keys = _graph_keys(base)
+        self._n = base.n
+        self._add = _EMPTY_KEYS
+        self._del = _EMPTY_KEYS
+        self._cache: CSRGraph | None = base
+        self.compact_frac = float(compact_frac)
+        self.compactions = 0
+
+    @classmethod
+    def from_edges(cls, n: int, src, dst, **kw) -> "DeltaCSR":
+        from repro.core.csr import csr_from_edges
+
+        return cls(csr_from_edges(n, src, dst), **kw)
+
+    # -- current-state views -------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def m(self) -> int:
+        """Current directed edge count (2x undirected)."""
+        return self._base_keys.size - self._del.size + self._add.size
+
+    @property
+    def overlay_size(self) -> int:
+        return self._add.size + self._del.size
+
+    def _current_keys(self) -> np.ndarray:
+        kept = np.setdiff1d(self._base_keys, self._del, assume_unique=True)
+        if self._add.size == 0:
+            return kept
+        return np.union1d(kept, self._add)  # disjoint sorted sets: pure merge
+
+    def graph(self) -> CSRGraph:
+        """The current graph as a (cached) host CSRGraph snapshot.
+
+        The snapshot object is reused until the next mutation, so device
+        views memoized on it (``_graph_device_cache``) survive across
+        recolor calls on a quiet graph.
+        """
+        if self._cache is None:
+            cur = self._current_keys()
+            src, dst = _ends(cur)
+            counts = np.bincount(src, minlength=self._n)
+            row_offsets = np.zeros(self._n + 1, np.int64)
+            np.cumsum(counts, out=row_offsets[1:])
+            self._cache = CSRGraph(row_offsets, dst.astype(np.int32))
+        return self._cache
+
+    def compact(self) -> CSRGraph:
+        """Fold the overlay into a fresh base; returns the compacted graph."""
+        g = self.graph()
+        if self.overlay_size or g is not self._base:
+            self._base = g
+            self._base_keys = _graph_keys(g)
+            self._add = _EMPTY_KEYS
+            self._del = _EMPTY_KEYS
+            self.compactions += 1
+        return self._base
+
+    def _touched(self) -> None:
+        self._cache = None
+        if self.overlay_size > self.compact_frac * max(self._base_keys.size, 64):
+            self.compact()
+
+    # -- batched mutations (each returns the dirtied vertex ids) -------------
+    def add_vertices(self, count: int) -> np.ndarray:
+        """Append ``count`` isolated vertices; returns their (new) ids."""
+        count = int(count)
+        if count < 0:
+            raise ValueError(f"cannot add {count} vertices")
+        ids = np.arange(self._n, self._n + count, dtype=np.int32)
+        if count:
+            self._n += count
+            self._cache = None  # id space grew; edge overlay unchanged
+        return ids
+
+    def add_edges(self, src, dst) -> np.ndarray:
+        """Insert an undirected edge batch; returns ids that gained neighbors."""
+        k = _clean_pairs(src, dst, self._n)
+        if k.size == 0:
+            return _EMPTY_IDS
+        in_base = np.isin(k, self._base_keys, assume_unique=True)
+        in_del = np.isin(k, self._del, assume_unique=True)
+        in_add = np.isin(k, self._add, assume_unique=True)
+        new = ~((in_base & ~in_del) | in_add)
+        if not new.any():
+            return _EMPTY_IDS
+        self._del = np.setdiff1d(self._del, k[new & in_del], assume_unique=True)
+        self._add = np.union1d(self._add, k[new & ~in_base])
+        self._touched()
+        return np.unique(k[new] >> 32).astype(np.int32)
+
+    def remove_edges(self, src, dst) -> np.ndarray:
+        """Delete an undirected edge batch; returns ids that lost neighbors."""
+        k = _clean_pairs(src, dst, self._n)
+        if k.size == 0:
+            return _EMPTY_IDS
+        in_base = np.isin(k, self._base_keys, assume_unique=True)
+        in_del = np.isin(k, self._del, assume_unique=True)
+        in_add = np.isin(k, self._add, assume_unique=True)
+        gone = (in_base & ~in_del) | in_add
+        if not gone.any():
+            return _EMPTY_IDS
+        self._del = np.union1d(self._del, k[gone & in_base])
+        self._add = np.setdiff1d(self._add, k[gone & in_add], assume_unique=True)
+        self._touched()
+        return np.unique(k[gone] >> 32).astype(np.int32)
+
+    def remove_vertices(self, ids) -> np.ndarray:
+        """Drop every edge incident to ``ids`` (slots stay, as isolated ids).
+
+        Returns the dirtied ids: the removed vertices AND their ex-neighbors
+        (whose neighborhoods shrank).
+        """
+        ids = np.unique(np.asarray(ids, dtype=np.int64).ravel())
+        if ids.size == 0:
+            return _EMPTY_IDS
+        if ids[0] < 0 or ids[-1] >= self._n:
+            raise ValueError(
+                f"vertex id out of range [0, {self._n}): saw "
+                f"{ids[0] if ids[0] < 0 else ids[-1]}")
+        # directed keys with src ∈ ids: base rows (minus deletions) + overlay
+        old = ids[ids < self._base.n]
+        lens = (self._base.row_offsets[old + 1]
+                - self._base.row_offsets[old]).astype(np.int64)
+        nbr = _gather_ragged(self._base.row_offsets, self._base.col_indices,
+                             old).astype(np.int64)
+        base_inc = (np.repeat(old, lens) << 32) | nbr
+        base_inc = np.setdiff1d(base_inc, self._del, assume_unique=True)
+        add_inc = self._add[np.isin(self._add >> 32, ids)]
+        inc = np.union1d(base_inc, add_inc)
+        if inc.size == 0:
+            return _EMPTY_IDS
+        u, v = _ends(inc)
+        partners = (v << 32) | u  # the symmetric halves stored under v's row
+        all_inc = np.union1d(inc, partners)
+        self._del = np.union1d(
+            self._del,
+            all_inc[np.isin(all_inc, self._base_keys, assume_unique=True)])
+        self._add = np.setdiff1d(self._add, all_inc, assume_unique=True)
+        self._touched()
+        # dirty = ids that actually lost edges + their ex-neighbors; edge-less
+        # members of ``ids`` were no-ops and dirty nobody (u ⊆ ids by
+        # construction — they are the incident keys' source endpoints)
+        return np.union1d(np.unique(u), np.unique(v)).astype(np.int32)

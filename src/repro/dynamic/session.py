@@ -1,0 +1,267 @@
+"""``ColoringSession`` — streaming incremental recoloring (DESIGN.md §14).
+
+The production north-star workload is a *mutating* graph: millions of users
+streaming edge updates, where a cold ``color()`` per mutation wastes
+everything the previous coloring already knows.  The paper's speculative
+scheme is exactly the machinery needed to serve it: the §12 rotated
+super-step already tolerates stale colors and repairs conflicts
+iteratively, so incremental recoloring is the SAME engine with the live
+mask restricted to the **dirty frontier** — the vertices whose
+neighborhoods changed since the last recolor — while every other color is
+frozen as snapshot context.
+
+Why the frontier suffices (the §14 cascade-confinement argument): a
+worklist vertex FirstFits a color distinct from *every* color visible in
+its gathered tile, frozen neighbors included, so a frontier vertex can
+never create a conflict against a frozen one — fresh conflicts only involve
+other frontier vertices speculating in the same step, and the cascade stays
+inside the worklist.  Edges between frozen vertices were valid before the
+delta (insertions dirty both endpoints; deletions cannot invalidate), so
+convergence of the frontier loop certifies validity of the whole coloring.
+Work is therefore frontier-proportional, not n-proportional.
+
+    session = open_session(rows, cols)          # cold ragged coloring
+    session.apply_delta(add_edges=(src, dst))   # O(Δ) overlay mutation
+    result = session.recolor()                  # frontier-sized super-steps
+
+Guarantees (tested in ``tests/test_dynamic.py``):
+
+* every committed ``recolor()`` result passes ``is_valid_coloring``;
+* an empty delta is a bit-identical no-op with zero work;
+* ``recolor(full=True)`` compacts the overlay and reproduces the cold
+  ragged engine bit-for-bit on the compacted graph;
+* ``result.work_items`` scales with the frontier (≥5x under 1% churn).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import register
+from repro.core.coloring import (
+    ColoringResult,
+    _graph_device_cache,
+    _resolve_classes,
+    color_data_driven,
+    resolve_tail_threshold,
+    run_ragged_engine,
+)
+from repro.core.csr import CSRGraph, DeviceCSR, csr_from_edges, next_pow2
+
+__all__ = ["ColoringSession", "color_dynamic", "open_session"]
+
+
+def _device_csr_padded(g: CSRGraph, wcap: int) -> DeviceCSR:
+    """A ``DeviceCSR`` whose array shapes are power-of-two stable.
+
+    ``DeviceCSR.from_csr`` sizes ``col_padded`` exactly (``m + Δmax``), so
+    every churn round would present new shapes to the jitted engine and
+    retrace it.  Padding the column array to ``next_pow2(m + wcap)`` (extra
+    slots hold the inert sentinel ``n``) makes consecutive recolors of a
+    slowly-mutating graph hit the jit cache instead.
+    """
+    import jax.numpy as jnp
+
+    n, m = g.n, g.m
+    cap = next_pow2(m + wcap)
+    col = np.full(cap, n, np.int32)
+    col[:m] = g.col_indices
+    deg = np.concatenate([g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
+    return DeviceCSR(
+        jnp.asarray(g.row_offsets.astype(np.int32)), jnp.asarray(col),
+        jnp.asarray(deg), n, wcap,
+    )
+
+
+def open_session(rows, cols=None, *, n: int | None = None,
+                 **opts) -> "ColoringSession":
+    """Open a streaming session from COO edge arrays (or a ready CSRGraph).
+
+    ``rows``/``cols`` are undirected edge endpoints (symmetrized and
+    deduplicated like every loader in the repo); ``n`` widens the vertex
+    count beyond ``max(endpoint) + 1`` when isolated vertices exist.  Extra
+    ``opts`` (heuristic, firstfit, mode, tiling, tail_serial, max_iters,
+    compact_frac) configure the session's engine.
+    """
+    if cols is None:
+        if not isinstance(rows, CSRGraph):
+            raise TypeError(
+                "open_session takes (rows, cols) edge arrays or a CSRGraph; "
+                f"got {type(rows).__name__}")
+        g = rows
+    else:
+        rows = np.asarray(rows, dtype=np.int64).ravel()
+        cols = np.asarray(cols, dtype=np.int64).ravel()
+        hi = int(max(rows.max(initial=-1), cols.max(initial=-1))) + 1
+        n = hi if n is None else int(n)
+        if n < hi:
+            raise ValueError(f"n={n} < max endpoint + 1 = {hi}")
+        g = csr_from_edges(n, rows, cols)
+    return ColoringSession(g, **opts)
+
+
+class ColoringSession:
+    """Persistent coloring of one mutating graph (DeltaCSR + §12 engine)."""
+
+    def __init__(self, graph, *, heuristic: str = "degree",
+                 firstfit: str = "bitset", mode: str = "fused",
+                 tiling="auto", tail_serial="auto",
+                 max_iters: int | None = None, compact_frac: float = 0.25):
+        from repro.dynamic.delta import DeltaCSR
+
+        self.delta = (graph if isinstance(graph, DeltaCSR)
+                      else DeltaCSR(graph, compact_frac=compact_frac))
+        self._heuristic = heuristic
+        self._firstfit = firstfit
+        self._mode = mode
+        self._tiling = tiling
+        self._tail_serial = tail_serial
+        self._max_iters = max_iters
+        self._dirty: list[np.ndarray] = []
+        self.result = self._cold(self.delta.graph())
+        self.colors = self.result.colors
+
+    # -- engine plumbing -----------------------------------------------------
+    def _cold(self, g: CSRGraph) -> ColoringResult:
+        return color_data_driven(
+            g, engine="ragged", mode=self._mode, heuristic=self._heuristic,
+            firstfit=self._firstfit, tiling=self._tiling,
+            tail_serial=self._tail_serial, max_iters=self._max_iters,
+        )
+
+    # -- state views ---------------------------------------------------------
+    @property
+    def graph(self) -> CSRGraph:
+        """The current (post-delta) graph snapshot."""
+        return self.delta.graph()
+
+    @property
+    def n(self) -> int:
+        return self.delta.n
+
+    @property
+    def num_colors(self) -> int:
+        return int(self.colors.max(initial=0))
+
+    def frontier(self) -> np.ndarray:
+        """Dirty vertex ids pending the next ``recolor()`` (sorted, unique)."""
+        if not self._dirty:
+            return np.zeros(0, np.int64)
+        return np.unique(np.concatenate(self._dirty)).astype(np.int64)
+
+    def validate(self) -> bool:
+        """True iff the committed coloring is proper on the current graph."""
+        from repro.core.validate import is_valid_coloring
+
+        return is_valid_coloring(self.delta.graph(), self.colors)
+
+    # -- mutation ------------------------------------------------------------
+    def apply_delta(self, *, add_vertices: int = 0, add_edges=None,
+                    remove_edges=None, remove_vertices=None) -> np.ndarray:
+        """Apply one batched mutation; returns the vertex ids it dirtied.
+
+        Applied in order vertex-adds → edge-adds → edge-removes →
+        vertex-removes, so a single delta can create vertices and
+        immediately wire them up.  ``add_edges``/``remove_edges`` are
+        ``(src, dst)`` array pairs; no-op entries (inserting an existing
+        edge, deleting a missing one) dirty nothing.
+        """
+        touched: list[np.ndarray] = []
+        if add_vertices:
+            touched.append(self.delta.add_vertices(add_vertices))
+        if add_edges is not None:
+            touched.append(self.delta.add_edges(*add_edges))
+        if remove_edges is not None:
+            touched.append(self.delta.remove_edges(*remove_edges))
+        if remove_vertices is not None:
+            touched.append(self.delta.remove_vertices(remove_vertices))
+        if not touched:
+            return np.zeros(0, np.int32)
+        out = np.unique(np.concatenate(
+            [np.asarray(t, dtype=np.int64) for t in touched]))
+        if out.size:
+            self._dirty.append(out)
+        return out.astype(np.int32)
+
+    # -- recoloring ----------------------------------------------------------
+    def recolor(self, *, full: bool = False) -> ColoringResult:
+        """Repair the coloring after pending deltas; commits on convergence.
+
+        Default: frontier-restricted §12 super-steps (work ∝ frontier).
+        ``full=True`` is the escape hatch — compact the overlay and rerun
+        the cold ragged engine on the whole graph, bit-for-bit the same
+        result a fresh ``color(g, "fused")`` would produce.
+        """
+        if full:
+            result = self._cold(self.delta.compact())
+        else:
+            frontier = self.frontier()
+            if frontier.size == 0:
+                return ColoringResult(
+                    self.colors.copy(), 0, 0, 0, True, "dynamic_sgr")
+            result = self._recolor_frontier(frontier)
+        if not result.converged:
+            raise RuntimeError(
+                "recolor() hit max_iters before converging; the session "
+                "coloring was NOT updated — retry with a larger max_iters, "
+                "tail_serial enabled, or recolor(full=True)")
+        self.colors = result.colors
+        self.result = result
+        self._dirty.clear()
+        return result
+
+    def _recolor_frontier(self, frontier: np.ndarray) -> ColoringResult:
+        import jax.numpy as jnp
+
+        g = self.delta.graph()
+        n = g.n
+        prev = self.colors
+        colors0 = np.zeros(n + 1, np.int32)
+        colors0[: prev.shape[0]] = prev  # n only grows; new slots stay 0
+        colors0[frontier] = 0            # the frontier recolors from scratch
+        deg = g.degrees
+        dmax = max(g.max_degree, 1)
+        wcap = next_pow2(dmax)
+        classes_idx, widths = _resolve_classes(
+            deg[frontier], (), self._tiling)
+        # pow2-pad worklists (inert sentinel n) and pow2-round tile widths so
+        # consecutive recolors present REPEATING shapes/static-args to the
+        # jitted engine — without this every churn round retraces the
+        # while_loop and wall time is dominated by compilation, not work
+        widths = [min(next_pow2(w), wcap) for w in widths]
+        classes, counts = [], []
+        for ci in classes_idx:
+            ids = frontier[ci].astype(np.int32)
+            classes.append(np.concatenate(
+                [ids, np.full(next_pow2(ids.size) - ids.size, n, np.int32)]))
+            counts.append(int(ids.size))
+        deg_ext = _graph_device_cache(g, "deg_ext", lambda: jnp.asarray(
+            np.concatenate([deg, np.zeros(1, np.int32)]).astype(np.int32)))
+        provider = _graph_device_cache(
+            g, "dcsr_dyn", lambda: _device_csr_padded(g, wcap))
+        tail_enabled, thr = resolve_tail_threshold(
+            self._tail_serial, int(frontier.size))
+        # pack_degrees needs colors < 2^15 — frozen colors included (they can
+        # exceed the CURRENT dmax + 1 bound after deletions shrink the graph)
+        pack = dmax < 2**15 - 1 and int(colors0.max(initial=0)) < 2**15 - 1
+        return run_ragged_engine(
+            n=n, provider=provider, deg_ext=deg_ext, classes=classes,
+            tile_widths=widths, acc_widths=widths, tail_width=dmax,
+            mode=self._mode, heuristic=self._heuristic, kind=self._firstfit,
+            use_kernel=False, coarsen=1, coarsen_lanes=None,
+            tail_enabled=tail_enabled, tail_threshold=thr,
+            max_iters=self._max_iters or n + 1, algorithm="dynamic_sgr",
+            pack_degrees=pack, colors_init=jnp.asarray(colors0),
+            stall_serializes_all=False, class_counts=counts,
+        )
+
+
+@register("dynamic")
+def color_dynamic(g: CSRGraph, **opts) -> ColoringResult:
+    """Cold-start a ``ColoringSession`` on ``g`` and return its coloring.
+
+    Registry adapter so the unified API (and benchmarks) can exercise the
+    dynamic engine's cold path — identical colors to
+    ``color(g, "fused", engine="ragged")``; keep the session itself
+    (``open_session``) for actual streaming workloads.
+    """
+    return ColoringSession(g, **opts).result

@@ -1,0 +1,133 @@
+"""Unit tests for the CI bench regression gate (benchmarks/check_regression.py).
+
+The gate is pure stdlib, so these tests run in milliseconds and prove the
+acceptance property directly: a document with an injected color regression,
+an invalid coloring, or an errored algorithm makes the checker FAIL (exit
+1), while the clean document passes.
+"""
+import copy
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import (  # noqa: E402
+    MIN_WORK_RATIO,
+    check,
+    main,
+    make_baseline,
+)
+
+DOC = {
+    "schema": 4,
+    "scale": 0.01,
+    "engine": "ragged",
+    "algorithms": {
+        "fused": {
+            "rmat-g": {"colors": 5, "valid": True, "seconds": 0.01},
+            "G3_circuit": {"colors": 2, "valid": True, "seconds": 0.02},
+        },
+    },
+    "bipartite": {"banded_b2": {"groups": 5, "optimal": 5, "valid": True}},
+    "dynamic": {
+        "rmat-g": {"colors": 6, "valid": True, "work_ratio": 16.4},
+    },
+}
+BASELINE = make_baseline([DOC])
+
+
+def test_clean_document_passes():
+    fails, _ = check(DOC, BASELINE)
+    assert fails == []
+
+
+def test_injected_color_regression_fails():
+    doc = copy.deepcopy(DOC)
+    doc["algorithms"]["fused"]["rmat-g"]["colors"] = 6  # baseline: 5
+    fails, _ = check(doc, BASELINE)
+    assert any("colors regressed 5 -> 6" in f for f in fails)
+
+
+def test_invalid_coloring_fails():
+    doc = copy.deepcopy(DOC)
+    doc["algorithms"]["fused"]["G3_circuit"]["valid"] = False
+    fails, _ = check(doc, BASELINE)
+    assert any("INVALID" in f for f in fails)
+
+
+def test_errored_algorithm_fails():
+    doc = copy.deepcopy(DOC)
+    doc["algorithms"]["fused"]["rmat-g"] = {"error": "ValueError: boom"}
+    fails, _ = check(doc, BASELINE)
+    assert any("errored" in f for f in fails)
+
+
+def test_bipartite_group_regression_fails():
+    doc = copy.deepcopy(DOC)
+    doc["bipartite"]["banded_b2"]["groups"] = 7
+    fails, _ = check(doc, BASELINE)
+    assert any("groups regressed 5 -> 7" in f for f in fails)
+
+
+def test_dynamic_work_ratio_floor():
+    doc = copy.deepcopy(DOC)
+    doc["dynamic"]["rmat-g"]["work_ratio"] = 1.2  # n-proportional again
+    fails, _ = check(doc, BASELINE)
+    assert any("work_ratio" in f and "floor" in f for f in fails)
+    assert BASELINE["dynamic"]["rmat-g"]["min_work_ratio"] == MIN_WORK_RATIO
+
+
+def test_scale_mismatch_skips_color_comparison_not_validity():
+    doc = copy.deepcopy(DOC)
+    doc["scale"] = 0.02  # weekly small-scale run
+    doc["algorithms"]["fused"]["rmat-g"]["colors"] = 9  # more colors is FINE
+    fails, notes = check(doc, BASELINE)
+    assert fails == []
+    assert any("not compared" in m for m in notes)
+    doc["algorithms"]["fused"]["rmat-g"]["valid"] = False  # but this never is
+    fails, _ = check(doc, BASELINE)
+    assert any("INVALID" in f for f in fails)
+
+
+def test_new_algorithm_is_a_note_not_a_failure():
+    doc = copy.deepcopy(DOC)
+    doc["algorithms"]["shiny_new"] = {
+        "rmat-g": {"colors": 3, "valid": True}}
+    fails, notes = check(doc, BASELINE)
+    assert fails == []
+    assert any("not in baseline" in m for m in notes)
+
+
+def test_main_exit_codes_and_baseline_roundtrip(tmp_path):
+    doc_path = tmp_path / "bench.json"
+    base_path = tmp_path / "baseline.json"
+    doc_path.write_text(json.dumps(DOC))
+    # --write-baseline then check against it: clean pass
+    assert main(["--write-baseline", str(doc_path), "-o", str(base_path)]) == 0
+    assert main([str(doc_path), "--baseline", str(base_path)]) == 0
+    # injected regression flips the exit code (the CI acceptance property)
+    bad = copy.deepcopy(DOC)
+    bad["algorithms"]["fused"]["rmat-g"]["colors"] = 99
+    bad_path = tmp_path / "bad.json"
+    bad_path.write_text(json.dumps(bad))
+    assert main([str(bad_path), "--baseline", str(base_path)]) == 1
+    # one bad document fails the whole invocation even among good ones
+    assert main([str(doc_path), str(bad_path),
+                 "--baseline", str(base_path)]) == 1
+    # no documents: usage error
+    assert main(["--baseline", str(base_path)]) == 2
+
+
+def test_checked_in_baseline_matches_repo_layout():
+    """The committed baseline parses and covers the CI artifact surface."""
+    here = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baseline_tiny.json")
+    with open(here) as f:
+        base = json.load(f)
+    assert base["scale"] == 0.01  # CI tiny preset pins the JSON scale
+    assert "fused" in base["algorithms"]
+    assert "dynamic" in base["algorithms"]
+    assert base["dynamic"], "dynamic churn records missing"
+    for rec in base["dynamic"].values():
+        assert rec["min_work_ratio"] >= MIN_WORK_RATIO
