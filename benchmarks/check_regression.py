@@ -14,7 +14,11 @@ fails (exit 1) when any produced record
   records for the same (algorithm, graph) — quality regression;
 * is a ``dynamic`` churn record whose ``work_ratio`` falls below the
   baseline's ``min_work_ratio`` floor — the §14 frontier-proportionality
-  guarantee regressed to n-proportional work.
+  guarantee regressed to n-proportional work;
+* is a schema-5 document missing its ``backend`` field, or carries a
+  ``roofline`` section whose per-class bytes are non-positive, fail to sum
+  to ``bytes_total``, or report a non-positive achieved bytes/s — the §15
+  bytes-moved model drifted from the engine's work accounting.
 
 Color comparisons only apply when the document's ``scale`` matches the
 baseline's (the weekly ``--scale small`` run still gets validity/error
@@ -47,6 +51,28 @@ def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
         notes.append(
             f"scale {doc.get('scale')} != baseline {baseline.get('scale')}: "
             "validity checked, color counts not compared")
+    if doc.get("schema", 0) >= 5 and "backend" not in doc:
+        fails.append("schema-5 document missing its 'backend' field")
+
+    def roofline_ok(where: str, rec: dict):
+        rl = rec.get("roofline")
+        if rl is None:
+            return
+        total = rl.get("bytes_total", 0)
+        if total <= 0:
+            fails.append(f"{where}: roofline bytes_total {total} <= 0")
+            return
+        by_class = sum(c.get("bytes", 0) for c in rl.get("classes", []))
+        if by_class != total:
+            fails.append(
+                f"{where}: roofline class bytes sum {by_class} != "
+                f"bytes_total {total}")
+        if any(c.get("bytes", 0) <= 0 for c in rl.get("classes", [])):
+            fails.append(f"{where}: roofline class with bytes <= 0")
+        if "achieved_bytes_per_s" in rl and rl["achieved_bytes_per_s"] <= 0:
+            fails.append(
+                f"{where}: roofline achieved_bytes_per_s "
+                f"{rl['achieved_bytes_per_s']} <= 0")
 
     def quality(kind: str, alg: str, name: str, rec: dict, field: str,
                 base_rec: dict | None):
@@ -56,6 +82,7 @@ def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
             return
         if rec.get("valid") is False:
             fails.append(f"{where}: INVALID coloring")
+        roofline_ok(where, rec)
         if base_rec is None:
             if same_scale:
                 notes.append(f"{where}: not in baseline (new?)")
@@ -87,7 +114,7 @@ def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
 
 def make_baseline(docs: list[dict]) -> dict:
     """Distill produced documents into the checked-in baseline shape."""
-    out: dict = {"schema": 4, "scale": None, "algorithms": {},
+    out: dict = {"schema": 5, "scale": None, "algorithms": {},
                  "bipartite": {}, "dynamic": {}}
     for doc in docs:
         out["scale"] = doc.get("scale", out["scale"])

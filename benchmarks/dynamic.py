@@ -24,7 +24,8 @@ CHURN = 0.01
 CHURN_GRAPHS = ("rmat-g", "G3_circuit", "europe.osm")
 
 
-def _churn_once(name: str, scale: float, rounds: int = 4) -> dict:
+def _churn_once(name: str, scale: float, rounds: int = 4,
+                backend: str | None = None) -> dict:
     """One graph's churn record: steady-state round times + work accounting.
 
     Per-round wall is the MIN across rounds (the §14 pow2-shape padding
@@ -37,7 +38,7 @@ def _churn_once(name: str, scale: float, rounds: int = 4) -> dict:
 
     g = build_graph(name, scale)
     rng = np.random.default_rng(14)
-    session = open_session(g)
+    session = open_session(g, backend=backend)
     w_inc = w_cold = frontier = 0
     t_inc, t_cold = [], []
     valid = True
@@ -49,7 +50,8 @@ def _churn_once(name: str, scale: float, rounds: int = 4) -> dict:
         inc = session.recolor()
         t_inc.append(time.perf_counter() - t0)
         t0 = time.perf_counter()
-        cold = color_data_driven(session.graph, mode="fused")
+        cold = color_data_driven(session.graph, mode="fused",
+                                 backend=backend)
         t_cold.append(time.perf_counter() - t0)
         w_inc += inc.work_items
         w_cold += cold.work_items
@@ -82,9 +84,10 @@ def bench_dynamic_churn():
     return rows
 
 
-def bench_dynamic_json(scale: float) -> dict:
+def bench_dynamic_json(scale: float, backend: str | None = None) -> dict:
     """The ``dynamic`` BENCH document section: one churn record per graph."""
-    return {name: _churn_once(name, scale) for name in CHURN_GRAPHS}
+    return {name: _churn_once(name, scale, backend=backend)
+            for name in CHURN_GRAPHS}
 
 
 DYNAMIC_BENCHES = (bench_dynamic_churn,)

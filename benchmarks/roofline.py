@@ -1,28 +1,90 @@
-"""Roofline analysis from dry-run JSON records (TPU v5e constants).
+"""Roofline analysis: coloring bytes-moved model + dry-run HLO table.
 
-Three terms per (arch x shape x mesh) cell, in seconds per step:
+Two halves share the hardware constants:
+
+**Coloring model** (§15) — the SGR super-step is gather-bound: it does a
+few integer compares per gathered cell, so the roofline that matters is
+HBM bytes/s, not FLOPs.  ``coloring_roofline`` turns a ``ColoringResult``'s
+per-degree-class work counters (``class_cells``: gather cells dispatched at
+each tile width, the serial tail included as a final full-width entry) into
+bytes moved per class, and — given the measured wall-clock — achieved
+bytes/s vs the platform peak.  Bytes per gather cell:
+
+  packed (``pack_degrees`` on, the default): 4B neighbor id + 4B packed
+      ``color | degree << 16`` word                            =  8 B/cell
+  split (packing gated off): 4B id + 4B color + 4B degree      = 12 B/cell
+
+This replaces the previous drift where the file carried only LM-training
+constants and nothing fed from the coloring engines; ``benchmarks/run.py
+--backend pallas`` embeds the model's output in BENCH schema-5 records.
+
+**Dry-run table** — three terms per (arch x shape x mesh) cell, in seconds
+per step, from the trip-count-corrected HLO analysis
+(launch/hlo_analysis.py) of the SPMD-partitioned per-device module:
   compute   = HLO_FLOPs_per_device / peak_FLOPs            (197 TF/s bf16)
   memory    = HBM_traffic_per_device / HBM_bw              (819 GB/s)
   collective= collective_bytes_per_device / ICI_link_bw    (50 GB/s/link)
-
-The per-device numbers come from the trip-count-corrected HLO analysis
-(launch/hlo_analysis.py) of the SPMD-partitioned per-device module, so
-"/(chips x peak)" in the task formula is already applied: the partitioned
-module IS the 1/chips share.  ``useful_flops_ratio`` = analytic model FLOPs
-(6*N*D train, 2*N*D serve) / (HLO flops x chips): <1 means remat/padding/
-attention overhead, the waste the paper's §Roofline asks us to catch.
+``useful_flops_ratio`` = analytic model FLOPs / (HLO flops x chips): <1
+means remat/padding/attention overhead.  These constants are TPU v5e and
+apply ONLY to this table and to ``PEAK_BYTES_PER_S["tpu_v5e"]``.
 """
 from __future__ import annotations
 
 import json
 
-PEAK_FLOPS = 197e12        # bf16 per chip
-HBM_BW = 819e9             # bytes/s per chip
-ICI_BW = 50e9              # bytes/s per link
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip (TPU v5e)
+ICI_BW = 50e9              # bytes/s per link (TPU v5e)
 
 CHIPS = {"single": 256, "pod": 512}
 
-__all__ = ["roofline_terms", "load_table", "format_table", "main"]
+# bytes one gather cell moves through the rotated super-step (§12/§15)
+BYTES_PER_CELL_PACKED = 8    # neighbor id + packed color|deg<<16 word
+BYTES_PER_CELL_SPLIT = 12    # neighbor id + color + degree, separately
+
+# peak HBM bytes/s per platform; None = unknown (no frac_of_peak reported)
+PEAK_BYTES_PER_S = {"tpu_v5e": HBM_BW, "tpu": HBM_BW, "cpu": None}
+
+__all__ = ["roofline_terms", "coloring_roofline", "load_table",
+           "format_table", "main", "BYTES_PER_CELL_PACKED",
+           "BYTES_PER_CELL_SPLIT", "PEAK_BYTES_PER_S"]
+
+
+def coloring_roofline(result, seconds: float | None = None, *,
+                      peak_bytes_per_s: float | None = None,
+                      packed: bool = True) -> dict:
+    """Per-degree-class bytes-moved model from ``ColoringResult`` counters.
+
+    ``result`` needs only ``class_cells`` (and is duck-typed so benchmark
+    records can replay saved counters).  ``seconds`` is the measured
+    wall-clock of the run; when given, each class reports its achieved
+    bytes/s contribution and the document carries the total achieved vs
+    ``peak_bytes_per_s`` (``frac_of_peak``; omitted when the peak is
+    unknown, e.g. CPU).  ``packed`` mirrors the engine's ``pack_degrees``
+    gate (split gathers move 12 B/cell instead of 8).
+    """
+    per_cell = BYTES_PER_CELL_PACKED if packed else BYTES_PER_CELL_SPLIT
+    class_cells = tuple(getattr(result, "class_cells", result))
+    classes = []
+    for width, cells in class_cells:
+        entry = {"width": int(width), "cells": int(cells),
+                 "bytes": int(cells) * per_cell}
+        classes.append(entry)
+    total = sum(c["bytes"] for c in classes)
+    out = {
+        "bytes_per_cell": per_cell,
+        "bytes_total": total,
+        "classes": classes,
+    }
+    if seconds is not None and seconds > 0:
+        for c in classes:
+            c["achieved_bytes_per_s"] = c["bytes"] / seconds
+        out["seconds"] = seconds
+        out["achieved_bytes_per_s"] = total / seconds
+        if peak_bytes_per_s:
+            out["peak_bytes_per_s"] = peak_bytes_per_s
+            out["frac_of_peak"] = (total / seconds) / peak_bytes_per_s
+    return out
 
 
 def roofline_terms(rec: dict) -> dict:

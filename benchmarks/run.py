@@ -30,6 +30,16 @@ graph, incremental ``session.recolor()`` vs cold re-color work/wall under
 1% streaming edge churn (``benchmarks/dynamic.py``).  CI's artifact is
 ``BENCH_coloring_dynamic.json``; ``benchmarks/check_regression.py`` gates
 every produced document against ``benchmarks/baseline_tiny.json``.
+
+Schema 5 adds ``--backend {jax,pallas}`` (§15): the chosen backend is
+threaded through the algorithms that take one (``data_driven``, ``fused``,
+``distance2``, ``dynamic``), the document carries a top-level ``backend``
+field, and every record whose result reports per-degree-class work counters
+(``ColoringResult.class_cells``) embeds a ``roofline`` section — bytes
+moved and achieved bytes/s per degree class (``benchmarks/roofline.py``'s
+coloring model).  Colors are bit-identical across backends, so the pallas
+document gates against the SAME baseline; CI's artifact is
+``BENCH_coloring_pallas.json``.
 """
 from __future__ import annotations
 
@@ -66,9 +76,21 @@ def _engine_opts(alg: str, engine: str) -> dict:
     return {}
 
 
-def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged") -> dict:
+# algorithms that accept the §15 backend= knob (kernel vs pure-JAX superstep)
+BACKEND_ALGS = ("data_driven", "fused", "distance2", "dynamic")
+BACKENDS = ("jax", "pallas")
+
+
+def _backend_opts(alg: str, backend: str) -> dict:
+    """The backend kwarg for ``alg`` (empty when it takes none)."""
+    return {"backend": backend} if alg in BACKEND_ALGS else {}
+
+
+def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
+                        backend: str = "jax") -> dict:
     """Per-algorithm colors + wall-clock on the small suite, as JSON."""
     from benchmarks.common import timeit_median
+    from benchmarks.roofline import coloring_roofline
     from repro import api
     from repro.core import is_valid_coloring
     from repro.d2 import compress_jacobian_pattern, validate_bipartite
@@ -77,9 +99,10 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged") -> dict:
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
     graphs = {name: build_graph(name, json_scale) for name in JSON_GRAPHS}
     doc = {
-        "schema": 4,
+        "schema": 5,
         "scale": json_scale,
         "engine": engine,
+        "backend": backend,
         "graphs": {
             name: {"n": g.n, "m": g.m, "max_degree": g.max_degree}
             for name, g in graphs.items()
@@ -90,7 +113,7 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged") -> dict:
     for alg in api.algorithms():
         if alg == "bipartite":  # needs a BipartiteGraph; measured below
             continue
-        opts = _engine_opts(alg, engine)
+        opts = {**_engine_opts(alg, engine), **_backend_opts(alg, backend)}
         per_graph = {}
         for name, g in graphs.items():
             try:
@@ -99,16 +122,23 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged") -> dict:
             except Exception as e:  # keep the harness going
                 per_graph[name] = {"error": f"{type(e).__name__}: {e}"}
                 continue
-            per_graph[name] = {
+            rec = {
                 "colors": r.num_colors,
                 "seconds": round(seconds, 6),
                 "compile_seconds": round(compile_s, 6),
                 "iterations": r.iterations,
                 "valid": bool(is_valid_coloring(g, r.colors)),
                 "engine": opts.get("engine", "-"),
+                "backend": opts.get("backend", "-"),
                 "halo_bytes_per_step": round(
                     getattr(r, "halo_bytes_per_step", 0.0), 1),
             }
+            if getattr(r, "class_cells", ()):
+                # the kernel path gathers colors/degrees separately (no
+                # pack_degrees fusion), so it moves split-size cells
+                rec["roofline"] = coloring_roofline(
+                    r, seconds, packed=(backend != "pallas"))
+            per_graph[name] = rec
         doc["algorithms"][alg] = per_graph
     band = 2
     bg = jacobian_band(int(20000 * json_scale) or 64, band=band)
@@ -130,16 +160,18 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged") -> dict:
 ENGINES = ("ragged", "padded", "classic", "sharded", "dynamic")
 
 
-def bench_dynamic_json_doc(path: str = JSON_PATH) -> dict:
+def bench_dynamic_json_doc(path: str = JSON_PATH,
+                           backend: str = "jax") -> dict:
     """The ``--engine dynamic`` document: §14 churn records, no matrix."""
     from benchmarks.dynamic import bench_dynamic_json
 
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
     doc = {
-        "schema": 4,
+        "schema": 5,
         "scale": json_scale,
         "engine": "dynamic",
-        "dynamic": bench_dynamic_json(json_scale),
+        "backend": backend,
+        "dynamic": bench_dynamic_json(json_scale, backend=backend),
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
@@ -166,6 +198,13 @@ def main() -> None:
         if engine not in ENGINES:
             raise SystemExit(
                 f"unknown --engine {engine!r}; options: {list(ENGINES)}")
+    backend = "jax"
+    if "--backend" in args:
+        tail = args[args.index("--backend") + 1:]
+        backend = tail[0] if tail else None
+        if backend not in BACKENDS:
+            raise SystemExit(
+                f"unknown --backend {backend!r}; options: {list(BACKENDS)}")
     if engine == "sharded":
         # the api would silently fall back to the single-device ragged
         # engine — refuse instead, so recorded bench numbers can never come
@@ -199,10 +238,11 @@ def main() -> None:
             print(f"# {bench.__name__} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
     if engine == "dynamic":
-        bench_dynamic_json_doc()
+        bench_dynamic_json_doc(backend=backend)
     else:
-        bench_coloring_json(engine=engine)
-    print(f"# wrote {JSON_PATH} (engine={engine})", file=sys.stderr)
+        bench_coloring_json(engine=engine, backend=backend)
+    print(f"# wrote {JSON_PATH} (engine={engine}, backend={backend})",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,13 @@ and ``algorithm="distance2"`` it dispatches to the batched multi-graph
 engine (``core/batch.py``) — one jitted call for the whole batch — and
 falls back to a per-graph loop otherwise.
 
+Backend selection (§15): ``color(g, backend="pallas")`` routes the rotated
+super-step through the fused Pallas kernel (``interpret=True`` off-TPU);
+``backend="jax"`` forces the pure-JAX engine, ``backend="auto"`` picks
+pallas on TPU only.  Colors are bit-identical across backends, so the knob
+is pure performance policy; engines that cannot host the kernel (the
+multi-device sharded engine) fall back to pure-JAX automatically.
+
 Multi-device (§13): ``color(g, engine="sharded")`` runs the sharded ragged
 engine over every available device (bit-identical colors, halo-exchange
 communication only) and ``color_batch(graphs, engine="sharded")`` places
@@ -120,7 +127,7 @@ def color_batch(
         from repro.core.batch import color_batch_fused, color_batch_sharded
 
         supported = {"heuristic", "firstfit", "use_kernel", "max_iters",
-                     "tail_serial", "engine", "devices"}
+                     "tail_serial", "engine", "devices", "backend"}
         extra = set(opts) - supported
         if extra:
             raise ValueError(

@@ -235,8 +235,14 @@ def color_batch_fused(
     max_iters: int | None = None,
     distance2: bool = False,
     tail_serial="auto",
+    backend: str | None = None,
 ) -> list[ColoringResult]:
     """Color B graphs in ONE jitted batched ``while_loop``; one result each.
+
+    ``backend="pallas"`` routes the vmapped rotated super-step through the
+    fused Pallas kernel (§15; the kernel vmaps over the batch axis in both
+    compiled and interpret mode) — colors are bit-identical to
+    ``backend="jax"``.
 
     The speculative loop runs until every graph converges, freezes at its
     tail threshold, or stalls; frozen graphs idle as all-sentinel no-op rows
@@ -251,6 +257,11 @@ def color_batch_fused(
     is unchanged, and results are bit-identical to per-graph
     ``color_distance2(mode="fused", strategy="precomputed")`` runs.
     """
+    from repro.kernels.dispatch import resolve_backend
+
+    # resolve once; recursion below passes the resolved knob (idempotent:
+    # resolve_backend(None, use_kernel=True) -> "pallas")
+    use_kernel = resolve_backend(backend, use_kernel) == "pallas"
     if isinstance(graphs, GraphBatch):
         if graphs.distance2 != distance2:
             raise ValueError(
@@ -403,6 +414,7 @@ def color_batch_sharded(
     max_iters: int | None = None,
     distance2: bool = False,
     tail_serial="auto",
+    backend: str | None = None,
 ) -> list[ColoringResult]:
     """Place a multi-graph batch across devices (§13 batch placement).
 
@@ -426,20 +438,26 @@ def color_batch_sharded(
                 max_iters=max_iters, tail_serial=tail_serial)
     if ndev <= 1 or B == 0:
         return color_batch_fused(graphs, distance2=distance2,
-                                 use_kernel=use_kernel, **opts)
+                                 use_kernel=use_kernel, backend=backend,
+                                 **opts)
     if use_kernel:
         raise ValueError("sharded batch placement does not support "
                          "use_kernel=True")
+    from repro.kernels.dispatch import resolve_backend
+
+    # §15 fallback: multi-device placement runs pure-JAX regardless of a
+    # pallas request (bit-identical colors); validate the name regardless
+    resolve_backend(backend)
     if B < ndev:
         if distance2:
             from repro.d2.coloring import color_distance2
 
             return [color_distance2(g, engine="sharded", devices=devices,
-                                    **opts) for g in graphs]
+                                    backend=backend, **opts) for g in graphs]
         from repro.core.coloring import color_data_driven
 
         return [color_data_driven(g, engine="sharded", devices=devices,
-                                  **opts) for g in graphs]
+                                  backend=backend, **opts) for g in graphs]
 
     mesh = Mesh(np.asarray(devices), ("b",))
     sh3 = NamedSharding(mesh, P("b", None, None))

@@ -98,6 +98,11 @@ class ColoringResult:
     # sharded engine only (§13): bytes of boundary colors a device receives
     # per super-step, averaged over the run; 0 on single-device engines
     halo_bytes_per_step: float = 0.0
+    # per-degree-class gather-cell accounting (§15): ``(width, cells)`` pairs
+    # for every class that dispatched work (the serial tail contributes a
+    # final full-width entry).  Partitions ``padded_work`` — the roofline
+    # model (benchmarks/roofline.py) turns it into bytes moved per class.
+    class_cells: tuple = ()
 
     @property
     def num_colors(self) -> int:
@@ -374,6 +379,20 @@ def _stalled(iters, total, prev) -> bool:
     return (iters >= 3) & (total * STALL_DEN >= STALL_NUM * prev)
 
 
+def _class_cells(acc_widths, cells_k, tail_width: int, tail_cells: int):
+    """Assemble ``ColoringResult.class_cells``: ``(width, cells)`` per class.
+
+    Zero-cell classes are dropped (a class that never dispatched moved no
+    bytes); a serial-tail pass contributes one final full-width entry.  The
+    remaining entries always partition ``padded_work`` exactly — the
+    invariant the roofline unit tests assert.
+    """
+    out = [(int(w), int(c)) for w, c in zip(acc_widths, cells_k) if c]
+    if tail_cells:
+        out.append((int(tail_width), int(tail_cells)))
+    return tuple(out)
+
+
 # --------------------------------------------------------------------------
 # row providers (pytrees) + module-level jitted engine entry points
 # --------------------------------------------------------------------------
@@ -535,6 +554,7 @@ def run_ragged_engine(
     iters = boot_iters
     work = n if boot_iters else 0
     padded = 0
+    cells_k = [0] * K  # per-class gather cells (partitions ``padded``)
     total = sum(counts)
     prev = total
     stalled = False
@@ -554,6 +574,7 @@ def run_ragged_engine(
             work += counts[k]
             if counts[k]:
                 padded += cap * acc_widths[k]
+                cells_k[k] += cap * acc_widths[k]
         colors_ext, new_wls, cnts = provider_tiled_superstep(
             provider, deg_ext, colors_ext, tuple(sliced),
             widths=tuple(tile_widths), heuristic=heuristic, kind=kind,
@@ -565,6 +586,7 @@ def run_ragged_engine(
         iters += 1
         total = sum(counts)
     converged = total == 0
+    tail_cells = 0
     if total > 0 and iters < max_iters and tail_enabled:
         if stalled and stall_serializes_all:
             # speculation failed to make progress — discard it and run one
@@ -579,12 +601,14 @@ def run_ragged_engine(
         tail_wl = order_tail(jnp.asarray(tail_np), deg_ext)
         colors_ext = provider_tail(provider, colors_ext, tail_wl, kind=kind)
         work += n if stalled and stall_serializes_all else total
-        padded += int(tail_wl.shape[0]) * tail_width
+        tail_cells = int(tail_wl.shape[0]) * tail_width
+        padded += tail_cells
         iters += 1
         converged = True
     return ColoringResult(
         np.asarray(colors_ext[:n]), iters, work, padded, converged,
         algorithm=algorithm,
+        class_cells=_class_cells(acc_widths, cells_k, tail_width, tail_cells),
     )
 
 
@@ -656,8 +680,11 @@ def _run_ragged_fused(
     total = int(sum(int(c) for c in counts))
     iters = int(it)
     work_items = int(work) + init_total
-    padded = (iters - boot_iters) * sum(c * w for c, w in zip(caps, acc_widths))
+    spec_steps = iters - boot_iters
+    cells_k = [spec_steps * c * w for c, w in zip(caps, acc_widths)]
+    padded = sum(cells_k)
     converged = total == 0
+    tail_cells = 0
     if total > 0 and iters < max_iters and tail_enabled:
         stalled = total > tail_threshold and bool(
             _stalled(iters, total, int(prev)))
@@ -668,12 +695,14 @@ def _run_ragged_fused(
             tail_wl = order_tail(combined, deg_ext)
         colors_ext = provider_tail(provider, colors_ext, tail_wl, kind=kind)
         work_items += n if stalled and stall_serializes_all else total
-        padded += int(tail_wl.shape[0]) * tail_width
+        tail_cells = int(tail_wl.shape[0]) * tail_width
+        padded += tail_cells
         iters += 1
         converged = True
     return ColoringResult(
         np.asarray(colors_ext[:n]), iters, work_items, padded, converged,
         algorithm=algorithm,
+        class_cells=_class_cells(acc_widths, cells_k, tail_width, tail_cells),
     )
 
 
@@ -847,8 +876,18 @@ def color_data_driven(
     tiling="auto",
     tail_serial="auto",
     devices=None,
+    backend: str | None = None,
 ) -> ColoringResult:
     """Color ``g`` with the paper's optimized data-driven SGR algorithm.
+
+    ``backend`` picks the super-step implementation (DESIGN.md §15):
+    ``"pallas"`` routes every degree-class tile through the fused Pallas
+    kernel (``kernels/superstep``; ``interpret=True`` off-TPU), ``"jax"``
+    forces the pure-JAX formulation, ``"auto"`` picks pallas on TPU only,
+    and ``None`` defers to the legacy ``use_kernel`` knob.  Colors are
+    bit-identical across backends (tested in ``tests/test_differential.py``);
+    the multi-device sharded engine always runs pure-JAX (automatic
+    fallback — its ``shard_map`` body cannot host the kernel).
 
     ``engine`` picks the execution engine (see the module docstring):
     ``ragged`` (CSR-native rotated super-step, the default), ``padded``
@@ -869,11 +908,15 @@ def color_data_driven(
     observe earlier chunks' colors, exactly like CUDA blocks scheduled in
     waves.  Overrides ``coarsen_ff`` when set.
     """
+    from repro.kernels.dispatch import resolve_backend
+
     n = g.n
     if n == 0:
+        resolve_backend(backend, use_kernel)  # validate even on the no-op
         return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True)
     max_iters = max_iters or n + 1
     if engine == "classic":
+        use_kernel = resolve_backend(backend, use_kernel) == "pallas"
         return _color_classic(
             g, heuristic, firstfit, use_kernel, coarsen_ff, coarsen_cr,
             coarsen_lanes, buckets, mode, max_iters, reuse_rows,
@@ -890,6 +933,9 @@ def color_data_driven(
                 "coarsen_ff/coarsen_cr/coarsen_lanes are not supported")
         devs = list(devices) if devices is not None else jax.devices()
         if len(devs) > 1:
+            # §15 fallback: the shard_map body stays pure-JAX; a pallas
+            # request degrades to wall-clock only (colors are bit-identical)
+            resolve_backend(backend)
             from repro.core.distributed import color_distributed
 
             return color_distributed(
@@ -900,6 +946,7 @@ def color_data_driven(
         # one device: the sharded schedule IS the ragged fused one — pin
         # mode so colors AND accounting are device-count-independent
         engine, mode = "ragged", "fused"
+    use_kernel = resolve_backend(backend, use_kernel) == "pallas"
     if engine not in ("ragged", "padded"):
         raise ValueError(
             f"unknown engine {engine!r}; options: ragged, padded, classic, "

@@ -314,8 +314,17 @@ def color_distance2(
     tail_serial="auto",
     engine: str = "ragged",
     devices=None,
+    backend: str | None = None,
 ) -> ColoringResult:
     """Distance-2 coloring of ``g`` with the rotated SGR super-step (§12).
+
+    ``backend`` (§15) picks the super-step implementation exactly as in
+    ``color_data_driven``: ``"pallas"`` routes the rotated two-hop tiles
+    through the fused superstep kernel (bit-identical — the kernel's loser
+    rule and winner-clearing FirstFit are insensitive to the duplicate/self
+    lanes composed tiles carry, see the module docstring), ``"jax"`` forces
+    pure-JAX, ``None`` defers to ``use_kernel``.  The multi-device sharded
+    engine always runs pure-JAX (automatic fallback).
 
     ``strategy="auto"`` precomputes the G² CSR when its estimated footprint
     (view + two-hop pair expansion) fits ``memory_budget``, else composes
@@ -332,6 +341,8 @@ def color_distance2(
     slices.  Colors are bit-identical to the single-device run; with one
     device it falls back to ``ragged``.
     """
+    from repro.kernels.dispatch import resolve_backend
+
     n = g.n
     if engine == "sharded":
         # validated before the one-device fallback: option surface must not
@@ -344,6 +355,8 @@ def color_distance2(
                 "engine='sharded' runs the unchunked (coarsen=1) schedule")
         devs = list(devices) if devices is not None else jax.devices()
         if len(devs) > 1 and n > 0:
+            # §15 fallback: the shard_map body stays pure-JAX
+            resolve_backend(backend)
             return _color_distance2_sharded(
                 g, devs, heuristic=heuristic, firstfit=firstfit,
                 strategy=strategy, memory_budget=memory_budget,
@@ -355,6 +368,7 @@ def color_distance2(
     elif engine != "ragged":
         raise ValueError(
             f"unknown engine {engine!r}; options: ragged, sharded")
+    use_kernel = resolve_backend(backend, use_kernel) == "pallas"
     if n == 0:
         return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
                               algorithm="distance2_sgr")

@@ -80,7 +80,7 @@ def open_session(rows, cols=None, *, n: int | None = None,
     deduplicated like every loader in the repo); ``n`` widens the vertex
     count beyond ``max(endpoint) + 1`` when isolated vertices exist.  Extra
     ``opts`` (heuristic, firstfit, mode, tiling, tail_serial, max_iters,
-    compact_frac) configure the session's engine.
+    compact_frac, backend) configure the session's engine.
     """
     if cols is None:
         if not isinstance(rows, CSRGraph):
@@ -105,8 +105,10 @@ class ColoringSession:
     def __init__(self, graph, *, heuristic: str = "degree",
                  firstfit: str = "bitset", mode: str = "fused",
                  tiling="auto", tail_serial="auto",
-                 max_iters: int | None = None, compact_frac: float = 0.25):
+                 max_iters: int | None = None, compact_frac: float = 0.25,
+                 backend: str | None = None):
         from repro.dynamic.delta import DeltaCSR
+        from repro.kernels.dispatch import resolve_backend
 
         self.delta = (graph if isinstance(graph, DeltaCSR)
                       else DeltaCSR(graph, compact_frac=compact_frac))
@@ -116,6 +118,10 @@ class ColoringSession:
         self._tiling = tiling
         self._tail_serial = tail_serial
         self._max_iters = max_iters
+        # §15: frontier recolors reuse the fused superstep kernel — the
+        # pow2-padded worklists below already keep its jit cache keys stable
+        self._backend = backend
+        self._use_kernel = resolve_backend(backend) == "pallas"
         self._dirty: list[np.ndarray] = []
         self.result = self._cold(self.delta.graph())
         self.colors = self.result.colors
@@ -126,6 +132,7 @@ class ColoringSession:
             g, engine="ragged", mode=self._mode, heuristic=self._heuristic,
             firstfit=self._firstfit, tiling=self._tiling,
             tail_serial=self._tail_serial, max_iters=self._max_iters,
+            backend=self._backend,
         )
 
     # -- state views ---------------------------------------------------------
@@ -247,7 +254,7 @@ class ColoringSession:
             n=n, provider=provider, deg_ext=deg_ext, classes=classes,
             tile_widths=widths, acc_widths=widths, tail_width=dmax,
             mode=self._mode, heuristic=self._heuristic, kind=self._firstfit,
-            use_kernel=False, coarsen=1, coarsen_lanes=None,
+            use_kernel=self._use_kernel, coarsen=1, coarsen_lanes=None,
             tail_enabled=tail_enabled, tail_threshold=thr,
             max_iters=self._max_iters or n + 1, algorithm="dynamic_sgr",
             pack_degrees=pack, colors_init=jnp.asarray(colors0),

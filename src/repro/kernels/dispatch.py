@@ -1,0 +1,55 @@
+"""Backend dispatch for the engine fast paths (DESIGN.md §15).
+
+One tiny resolver decides, for every engine entry point, whether the ragged
+super-step runs through the fused Pallas kernel (``kernels/superstep``) or
+the pure-JAX formulation.  Both produce bit-identical colors — the kernel
+implements the exact same conflict rule and bitset FirstFit arithmetic — so
+the choice is purely a performance policy and the resolver is the single
+place that policy lives:
+
+* ``backend=None``   — legacy: honor the per-call ``use_kernel`` knob
+  (``use_kernel=True`` has always meant "route through the Pallas kernels").
+* ``backend="jax"``  — force the pure-JAX engine.  Contradicting it with
+  ``use_kernel=True`` raises instead of silently picking a side.
+* ``backend="pallas"`` — force the kernel path.  On non-TPU backends the
+  kernels run in ``interpret=True`` mode (see ``kernels/superstep/ops.py``),
+  slow but bit-identical — which is what the differential test matrix runs
+  in CI.
+* ``backend="auto"`` — ``pallas`` when the default JAX backend is a TPU,
+  ``jax`` otherwise (interpret mode is a debugging tool, not a fast path).
+
+Engines that cannot host the kernel (the §13 multi-device sharded engine —
+``shard_map`` bodies stay pure-JAX) treat ``backend="pallas"`` as an
+automatic fallback to pure-JAX: bit-identity makes the fallback invisible
+except in wall-clock.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["resolve_backend", "BACKENDS"]
+
+BACKENDS = ("jax", "pallas", "auto")
+
+
+def resolve_backend(backend: str | None, use_kernel: bool = False) -> str:
+    """Resolve the ``backend=`` option to ``"jax"`` or ``"pallas"``.
+
+    ``use_kernel`` is the legacy per-call knob; it decides only when
+    ``backend`` is None and conflicts loudly with ``backend="jax"``.
+    """
+    if backend is None:
+        return "pallas" if use_kernel else "jax"
+    if backend == "auto":
+        return "pallas" if (use_kernel or jax.default_backend() == "tpu") \
+            else "jax"
+    if backend == "jax":
+        if use_kernel:
+            raise ValueError(
+                "backend='jax' contradicts use_kernel=True; drop one of them "
+                "(backend='pallas' is the kernel path)")
+        return "jax"
+    if backend == "pallas":
+        return "pallas"
+    raise ValueError(
+        f"unknown backend {backend!r}; options: {', '.join(BACKENDS)}")

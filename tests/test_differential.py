@@ -1,0 +1,168 @@
+"""Cross-engine × cross-backend differential matrix (DESIGN.md §15).
+
+The §15 contract in one file: every engine realization of the SGR schedule
+(classic / ragged / padded / sharded / dynamic-full) must produce
+**bit-identical** colors whether its super-step runs through the pure-JAX
+formulation (``backend="jax"``) or the fused Pallas kernel
+(``backend="pallas"``, interpret mode on CPU), for both the edge
+(distance-1) and distance-2 relations, on the full benchmark suite plus the
+adversarial shapes that historically break tile/worklist handling (empty
+graph, single vertex, star, clique, isolated vertices, degrees exactly at a
+tile threshold).  Every pallas result is additionally validated outright,
+so a backend that "agrees" by being wrong the same way still has to be a
+proper coloring.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.api import open_session
+from repro.core import (
+    CSRGraph,
+    color_data_driven,
+    csr_from_edges,
+    is_valid_coloring,
+)
+from repro.d2 import color_distance2, validate_d2
+from repro.graphs import build_graph
+
+SUITE = ("rmat-er", "rmat-g", "G3_circuit", "europe.osm", "thermal2")
+SUITE_SCALE = 0.01
+
+
+def _star(n=9):
+    return csr_from_edges(n, np.zeros(n - 1, np.int64),
+                          np.arange(1, n, dtype=np.int64))
+
+
+def _clique(k=9):
+    src, dst = np.triu_indices(k, 1)
+    return csr_from_edges(k, src, dst)
+
+
+def _isolated():
+    # 12 vertices, edges only among the first 6 — the tail must stay color 1
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 6, 20)
+    dst = rng.integers(0, 6, 20)
+    return csr_from_edges(12, src, dst)
+
+
+def _threshold():
+    # degrees exactly AT the explicit tile thresholds (4, 8): two disjoint
+    # cliques K5 (degree 4) and K9 (degree 8) — every vertex sits on a
+    # class boundary, the off-by-one hotspot of the tiled dispatch
+    s5, d5 = np.triu_indices(5, 1)
+    s9, d9 = np.triu_indices(9, 1)
+    src = np.concatenate([s5, s9 + 5])
+    dst = np.concatenate([d5, d9 + 5])
+    return csr_from_edges(14, src, dst)
+
+
+ADVERSARIAL = {
+    "empty": lambda: CSRGraph(np.zeros(1, np.int64), np.zeros(0, np.int32)),
+    "single": lambda: CSRGraph(np.zeros(2, np.int64), np.zeros(0, np.int32)),
+    "star": _star,
+    "clique": _clique,
+    "isolated": _isolated,
+    "threshold": _threshold,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _graph(name: str) -> CSRGraph:
+    if name in ADVERSARIAL:
+        return ADVERSARIAL[name]()
+    return build_graph(name, SUITE_SCALE)
+
+
+ALL_GRAPHS = list(SUITE) + list(ADVERSARIAL)
+
+EDGE_ENGINES = ("classic", "ragged", "padded", "sharded", "dynamic-full")
+D2_ENGINES = ("ragged", "sharded")
+
+
+def _edge_color(g: CSRGraph, engine: str, backend: str):
+    if engine == "dynamic-full":
+        # the dynamic engine's bit-identity surface: cold session coloring,
+        # a deterministic delta, then the full-recolor escape hatch — all
+        # three route through the ragged fused engine with the backend
+        session = open_session(g, backend=backend)
+        if g.n >= 2:
+            rng = np.random.default_rng(7)
+            k = max(1, g.n // 100)
+            src = rng.integers(0, g.n, k)
+            dst = rng.integers(0, g.n, k)
+            keep = src != dst
+            session.apply_delta(add_edges=(src[keep], dst[keep]))
+            if session.frontier().size:
+                session.recolor()
+            return session.recolor(full=True), session.graph
+        return session.result, g
+    opts = {"engine": engine, "backend": backend}
+    if engine == "ragged":
+        opts["mode"] = "fused"
+    return color_data_driven(g, **opts), g
+
+
+@pytest.mark.parametrize("engine", EDGE_ENGINES)
+@pytest.mark.parametrize("gname", ALL_GRAPHS)
+def test_edge_matrix_backends_bit_identical(gname, engine):
+    g = _graph(gname)
+    r_jax, g_jax = _edge_color(g, engine, "jax")
+    r_pal, g_pal = _edge_color(g, engine, "pallas")
+    np.testing.assert_array_equal(r_jax.colors, r_pal.colors)
+    assert r_jax.iterations == r_pal.iterations, (gname, engine)
+    assert r_jax.converged and r_pal.converged
+    assert is_valid_coloring(g_pal, r_pal.colors), (gname, engine)
+    assert is_valid_coloring(g_jax, r_jax.colors), (gname, engine)
+
+
+@pytest.mark.parametrize("engine", D2_ENGINES)
+@pytest.mark.parametrize("gname", ALL_GRAPHS)
+def test_distance2_matrix_backends_bit_identical(gname, engine):
+    g = _graph(gname)
+    r_jax = color_distance2(g, engine=engine, backend="jax")
+    r_pal = color_distance2(g, engine=engine, backend="pallas")
+    np.testing.assert_array_equal(r_jax.colors, r_pal.colors)
+    assert r_jax.iterations == r_pal.iterations, (gname, engine)
+    assert r_jax.converged and r_pal.converged
+    assert validate_d2(g, r_pal.colors), (gname, engine)
+
+
+@pytest.mark.parametrize("gname", ["threshold", "rmat-g"])
+def test_explicit_buckets_backends_bit_identical(gname):
+    """Degree classes pinned exactly at (4, 8): per-class kernel tiles with
+    W == threshold must agree with pure-JAX lane arithmetic on the boundary."""
+    g = _graph(gname)
+    for engine in ("ragged", "padded"):
+        r_jax = color_data_driven(g, engine=engine, buckets=(4, 8),
+                                  backend="jax")
+        r_pal = color_data_driven(g, engine=engine, buckets=(4, 8),
+                                  backend="pallas")
+        np.testing.assert_array_equal(r_jax.colors, r_pal.colors)
+        assert r_jax.iterations == r_pal.iterations, (gname, engine)
+        assert is_valid_coloring(g, r_pal.colors)
+
+
+def test_pallas_equals_legacy_use_kernel():
+    """backend='pallas' IS the use_kernel path — same results, new spelling."""
+    g = _graph("rmat-er")
+    new = color_data_driven(g, backend="pallas")
+    old = color_data_driven(g, use_kernel=True)
+    np.testing.assert_array_equal(new.colors, old.colors)
+    assert new.iterations == old.iterations
+
+
+def test_backend_option_surface():
+    g = _graph("star")
+    with pytest.raises(ValueError, match="contradicts"):
+        color_data_driven(g, backend="jax", use_kernel=True)
+    with pytest.raises(ValueError, match="unknown backend"):
+        color_data_driven(g, backend="cuda")
+    with pytest.raises(ValueError, match="unknown backend"):
+        color_distance2(g, backend="cuda")
+    # auto resolves to a concrete backend on any platform
+    r = color_data_driven(g, backend="auto")
+    assert is_valid_coloring(g, r.colors)

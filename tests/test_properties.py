@@ -11,10 +11,16 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import csr_from_edges  # noqa: E402
+from repro.api import open_session  # noqa: E402
+from repro.core import color_data_driven, csr_from_edges  # noqa: E402
 from repro.core.firstfit import FF_FUNCS  # noqa: E402
-from repro.core.heuristics import conflict_lose_flags  # noqa: E402
+from repro.core.heuristics import (  # noqa: E402
+    conflict_lose_flags,
+    conflict_lose_lanes,
+)
 from repro.kernels.firstfit.ref import firstfit_ref  # noqa: E402
+from repro.kernels.superstep.ops import superstep_tpu  # noqa: E402
+from repro.kernels.superstep.ref import superstep_ref  # noqa: E402
 
 
 def _oracle_row(row):
@@ -65,6 +71,89 @@ def test_conflict_exactly_one_loser(seed):
                     jnp.asarray([colors[v]]), jnp.asarray([[colors[u]]]),
                     jnp.asarray([deg[v]]), jnp.asarray([[deg[u]]]), heuristic)
                 assert bool(lu[0]) != bool(lv[0]), (heuristic, u, v)
+
+
+def _pure_jax_superstep(ids, nid, my_c, nc, my_d, nd, heuristic):
+    """The production pure-JAX formulation of one rotated super-step, built
+    from the same pieces the ragged engine composes (conflict_lose_flags +
+    bitset FirstFit) — the §15 bit-identity contract in miniature."""
+    same, lose = conflict_lose_lanes(ids, nid, my_c, nc, my_d, nd, heuristic)
+    need = jnp.any(lose, axis=1) | (my_c == 0)
+    ff = FF_FUNCS["bitset"](jnp.where(same & ~lose, 0, nc))
+    return jnp.where(need, ff, my_c.astype(jnp.int32)), need
+
+
+@given(
+    st.integers(1, 60),                   # worklist lanes
+    st.integers(1, 70),                   # tile width (crosses nwords=2)
+    st.sampled_from(["id", "degree"]),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_superstep_kernel_ref_purejax_triple_agree(w, W, heuristic, seed):
+    """Fuzz the §15 triple: Pallas kernel (interpret off-TPU) == independent
+    quadratic oracle == production pure-JAX step, on random padded tiles."""
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(w + 5)[:w].astype(np.int32)
+    nid = rng.integers(0, w + 5, size=(w, W)).astype(np.int32)
+    my_c = rng.integers(0, W + 2, size=(w,)).astype(np.int32)
+    nc = rng.integers(0, W + 2, size=(w, W)).astype(np.int32)
+    my_d = rng.integers(0, 9, size=(w,)).astype(np.int32)
+    nd = rng.integers(0, 9, size=(w, W)).astype(np.int32)
+    args = tuple(map(jnp.asarray, (ids, nid, my_c, nc, my_d, nd)))
+    kern_c, kern_n = superstep_tpu(*args, heuristic)
+    ref_c, ref_n = superstep_ref(*args, heuristic)
+    jax_c, jax_n = _pure_jax_superstep(*args, heuristic)
+    np.testing.assert_array_equal(np.asarray(kern_c), np.asarray(ref_c))
+    np.testing.assert_array_equal(np.asarray(kern_n), np.asarray(ref_n))
+    np.testing.assert_array_equal(np.asarray(jax_c), np.asarray(ref_c))
+    np.testing.assert_array_equal(np.asarray(jax_n), np.asarray(ref_n))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_dynamic_churn_matches_cold_recolor(seed):
+    """DeltaCSR churn property (§14/§15): after any add/remove sequence the
+    incremental session stays valid, its overlay graph equals a from-scratch
+    CSR rebuild of the surviving edges, and ``recolor(full=True)`` is
+    bit-identical to a cold fused coloring of the mutated graph."""
+    rng = np.random.default_rng(seed)
+    n = 60
+    src = rng.integers(0, n, 150)
+    dst = rng.integers(0, n, 150)
+    keep = src != dst
+    edges = {tuple(sorted(e)) for e in zip(src[keep], dst[keep])}
+    g0 = csr_from_edges(n, src[keep], dst[keep])
+    session = open_session(g0)
+    assert session.validate()
+    for _ in range(3):
+        a_src = rng.integers(0, n, 12)
+        a_dst = rng.integers(0, n, 12)
+        ka = a_src != a_dst
+        edges |= {tuple(sorted(e)) for e in zip(a_src[ka], a_dst[ka])}
+        session.apply_delta(add_edges=(a_src[ka], a_dst[ka]))
+        if edges:
+            pool = sorted(edges)
+            drop = [pool[i] for i in
+                    rng.choice(len(pool), min(6, len(pool)), replace=False)]
+            edges -= set(drop)
+            r_src = np.array([e[0] for e in drop], np.int64)
+            r_dst = np.array([e[1] for e in drop], np.int64)
+            session.apply_delta(remove_edges=(r_src, r_dst))
+        if session.frontier().size:
+            session.recolor()
+        assert session.validate()
+    full = session.recolor(full=True)
+    live = session.graph
+    if edges:
+        scratch = csr_from_edges(
+            n, np.array([e[0] for e in edges], np.int64),
+            np.array([e[1] for e in edges], np.int64))
+        np.testing.assert_array_equal(live.row_offsets, scratch.row_offsets)
+        np.testing.assert_array_equal(live.col_indices, scratch.col_indices)
+    cold = color_data_driven(live, engine="ragged", mode="fused")
+    np.testing.assert_array_equal(full.colors, cold.colors)
+    assert full.iterations == cold.iterations
 
 
 @given(st.integers(2, 200), st.integers(0, 10**6))

@@ -99,6 +99,67 @@ def test_new_algorithm_is_a_note_not_a_failure():
     assert any("not in baseline" in m for m in notes)
 
 
+def _schema5_doc():
+    doc = copy.deepcopy(DOC)
+    doc["schema"] = 5
+    doc["backend"] = "pallas"
+    doc["algorithms"]["fused"]["rmat-g"]["backend"] = "pallas"
+    doc["algorithms"]["fused"]["rmat-g"]["roofline"] = {
+        "bytes_per_cell": 12,
+        "bytes_total": 1200,
+        "classes": [
+            {"width": 8, "cells": 50, "bytes": 600,
+             "achieved_bytes_per_s": 6e7},
+            {"width": 32, "cells": 50, "bytes": 600,
+             "achieved_bytes_per_s": 6e7},
+        ],
+        "achieved_bytes_per_s": 1.2e8,
+        "seconds": 1e-5,
+    }
+    return doc
+
+
+def test_schema5_clean_document_passes():
+    fails, _ = check(_schema5_doc(), BASELINE)
+    assert fails == []
+
+
+def test_schema5_missing_backend_fails():
+    doc = _schema5_doc()
+    del doc["backend"]
+    fails, _ = check(doc, BASELINE)
+    assert any("missing its 'backend' field" in f for f in fails)
+
+
+def test_roofline_byte_sum_mismatch_fails():
+    doc = _schema5_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["roofline"]["bytes_total"] = 601
+    fails, _ = check(doc, BASELINE)
+    assert any("class bytes sum 1200 != bytes_total 601" in f for f in fails)
+
+
+def test_roofline_nonpositive_bytes_fail():
+    doc = _schema5_doc()
+    rl = doc["algorithms"]["fused"]["rmat-g"]["roofline"]
+    rl["bytes_total"] = 0
+    fails, _ = check(doc, BASELINE)
+    assert any("bytes_total 0 <= 0" in f for f in fails)
+    doc = _schema5_doc()
+    rl = doc["algorithms"]["fused"]["rmat-g"]["roofline"]
+    rl["classes"][1]["bytes"] = 0
+    rl["bytes_total"] = 600
+    fails, _ = check(doc, BASELINE)
+    assert any("class with bytes <= 0" in f for f in fails)
+
+
+def test_roofline_nonpositive_rate_fails():
+    doc = _schema5_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["roofline"][
+        "achieved_bytes_per_s"] = 0.0
+    fails, _ = check(doc, BASELINE)
+    assert any("achieved_bytes_per_s 0.0 <= 0" in f for f in fails)
+
+
 def test_main_exit_codes_and_baseline_roundtrip(tmp_path):
     doc_path = tmp_path / "bench.json"
     base_path = tmp_path / "baseline.json"

@@ -1,0 +1,81 @@
+"""The §15 coloring roofline model (``benchmarks/roofline.py``).
+
+The model turns ``ColoringResult.class_cells`` — per-degree-class gather
+cells, fed straight from the engine's work accounting — into bytes moved
+and achieved bytes/s.  These tests pin the bytes-per-cell constants on a
+hand-countable graph, assert the partition invariant (class cells sum to
+``padded_work`` exactly) on real engine runs, and check the peak-fraction
+arithmetic the BENCH schema-5 records embed.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import (  # noqa: E402
+    BYTES_PER_CELL_PACKED,
+    BYTES_PER_CELL_SPLIT,
+    coloring_roofline,
+)
+from repro.core import color_data_driven, csr_from_edges  # noqa: E402
+
+
+def _star(n=9):
+    return csr_from_edges(n, np.zeros(n - 1, np.int64),
+                          np.arange(1, n, dtype=np.int64))
+
+
+def test_star_graph_known_bytes():
+    """K1,8: one fused bootstrap step, 9 lanes x width-8 tiles = 72 cells.
+    8 B/cell packed -> 576 bytes, a number small enough to count by hand."""
+    g = _star(9)
+    r = color_data_driven(g, mode="fused")
+    assert r.class_cells == ((8, 72),)
+    rl = coloring_roofline(r)
+    assert rl["bytes_per_cell"] == BYTES_PER_CELL_PACKED == 8
+    assert rl["bytes_total"] == 576
+    assert rl["classes"] == [{"width": 8, "cells": 72, "bytes": 576}]
+
+
+@pytest.mark.parametrize("mode", ["workefficient", "fused"])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_class_cells_partition_padded_work(mode, use_kernel):
+    """Invariant: the per-class cells PARTITION the engine's padded_work —
+    the roofline model accounts for every gather cell exactly once."""
+    rng = np.random.default_rng(5)
+    src = rng.integers(0, 400, 2400)
+    dst = rng.integers(0, 400, 2400)
+    g = csr_from_edges(400, src[src != dst], dst[src != dst])
+    r = color_data_driven(g, mode=mode, use_kernel=use_kernel)
+    assert r.class_cells, (mode, use_kernel)
+    assert sum(c for _, c in r.class_cells) == r.padded_work
+    assert all(w > 0 and c > 0 for w, c in r.class_cells)
+
+
+def test_roofline_rates_and_peak_fraction():
+    r = coloring_roofline(((8, 72),), seconds=1e-6, peak_bytes_per_s=819e9)
+    assert r["achieved_bytes_per_s"] == pytest.approx(576e6)
+    assert r["frac_of_peak"] == pytest.approx(576e6 / 819e9)
+    assert r["classes"][0]["achieved_bytes_per_s"] == pytest.approx(576e6)
+    # no seconds -> static bytes only, no rate keys
+    dry = coloring_roofline(((8, 72),))
+    assert "achieved_bytes_per_s" not in dry and "frac_of_peak" not in dry
+
+
+def test_packed_vs_split_cell_size():
+    """backend='pallas' gathers colors/degrees separately (pack_degrees is
+    gated off under the kernel), so its records use the 12 B split cell."""
+    packed = coloring_roofline(((8, 72),), packed=True)
+    split = coloring_roofline(((8, 72),), packed=False)
+    assert split["bytes_per_cell"] == BYTES_PER_CELL_SPLIT == 12
+    assert split["bytes_total"] == packed["bytes_total"] * 12 // 8 == 864
+
+
+def test_multiclass_bytes_sum():
+    rl = coloring_roofline(((8, 100), (32, 50), (128, 10)), seconds=2.0)
+    assert rl["bytes_total"] == sum(c["bytes"] for c in rl["classes"])
+    assert rl["bytes_total"] == (100 + 50 + 10) * 8
+    assert rl["achieved_bytes_per_s"] == pytest.approx(rl["bytes_total"] / 2.0)

@@ -90,6 +90,64 @@ def test_superstep_kernel_semantics():
     np.testing.assert_array_equal(np.asarray(newc), [1, 2])
 
 
+@pytest.mark.parametrize("W", [31, 32, 63, 64])
+def test_superstep_kernel_nwords_boundary(W):
+    """Every color 1..W forbidden forces FirstFit to W+1 — the bit that
+    lives exactly at (or one past) a 32-bit bitset word boundary, where an
+    off-by-one in ``nwords = (W + 1 + 31) // 32`` would truncate."""
+    w = 4
+    ids = jnp.arange(w, dtype=jnp.int32)
+    nid = jnp.broadcast_to(jnp.arange(w, w + W, dtype=jnp.int32), (w, W))
+    my_c = jnp.zeros(w, jnp.int32)  # uncolored: must FirstFit
+    nc = jnp.broadcast_to(jnp.arange(1, W + 1, dtype=jnp.int32), (w, W))
+    my_d = jnp.full(w, W, jnp.int32)
+    nd = jnp.full((w, W), W, jnp.int32)
+    got_c, got_n = superstep_tpu(ids, nid, my_c, nc, my_d, nd, "degree")
+    want_c, want_n = superstep_ref(ids, nid, my_c, nc, my_d, nd, "degree")
+    np.testing.assert_array_equal(np.asarray(got_c), np.full(w, W + 1))
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    np.testing.assert_array_equal(np.asarray(got_n), np.asarray(want_n))
+
+
+@pytest.mark.parametrize("heuristic", ["id", "degree"])
+def test_superstep_kernel_all_conflict_worklist(heuristic):
+    """A monochromatic clique tile: every lane conflicts with every other.
+    Equal degrees leave a single total-order winner — the largest id under
+    the "id" rule, the smallest under "degree"'s id tiebreak — who alone
+    keeps color 1 while every loser refits around the winners it lost to."""
+    k = 9
+    ids = jnp.arange(k, dtype=jnp.int32)
+    nid = jnp.asarray(
+        [[v for v in range(k) if v != u] for u in range(k)], jnp.int32)
+    my_c = jnp.ones(k, jnp.int32)
+    nc = jnp.ones((k, k - 1), jnp.int32)
+    my_d = jnp.full(k, k - 1, jnp.int32)
+    nd = jnp.full((k, k - 1), k - 1, jnp.int32)
+    got_c, got_n = superstep_tpu(ids, nid, my_c, nc, my_d, nd, heuristic)
+    want_c, want_n = superstep_ref(ids, nid, my_c, nc, my_d, nd, heuristic)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    np.testing.assert_array_equal(np.asarray(got_n), np.asarray(want_n))
+    winner = k - 1 if heuristic == "id" else 0
+    need = np.asarray(got_n)
+    assert not need[winner] and need.sum() == k - 1
+    assert int(got_c[winner]) == 1
+    # losers all refit to 2: beaten neighbors' colors are not forbidden
+    losers = np.asarray(got_c)[np.arange(k) != winner]
+    np.testing.assert_array_equal(losers, np.full(k - 1, 2))
+
+
+def test_superstep_kernel_worklist_smaller_than_block():
+    """w < block_n: the grid pads the worklist axis; padding lanes must not
+    corrupt the live ones nor the returned shapes."""
+    args = _random_tile(3, 12, seed=21)
+    for block_n in (8, 64, 256):
+        got_c, got_n = superstep_tpu(*args, "degree", block_n=block_n)
+        want_c, want_n = superstep_ref(*args, "degree")
+        assert got_c.shape == (3,) and got_n.shape == (3,)
+        np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+        np.testing.assert_array_equal(np.asarray(got_n), np.asarray(want_n))
+
+
 def test_use_kernel_matches_pure_jax_engine():
     g = GRAPHS["er"]()
     for mode in ("workefficient", "fused"):
