@@ -18,7 +18,18 @@ fails (exit 1) when any produced record
 * is a schema-5 document missing its ``backend`` field, or carries a
   ``roofline`` section whose per-class bytes are non-positive, fail to sum
   to ``bytes_total``, or report a non-positive achieved bytes/s — the §15
-  bytes-moved model drifted from the engine's work accounting.
+  bytes-moved model drifted from the engine's work accounting;
+* is a schema-6 record of a traced algorithm (``TRACED_ALGS``) missing its
+  ``trace`` section, or carrying one with mismatched series lengths,
+  negative entries, or rows violating ``retired + conflicts == live`` —
+  the §16 telemetry substrate broke;
+* records MORE supersteps than the baseline for the same (algorithm,
+  graph), or triggers the serial tail EARLIER (``tail_step`` with ``-1``
+  meaning never) — the convergence schedule regressed;
+* is a schema-6 ``dynamic`` record whose ``jit.misses`` exceeds the
+  baseline's ``max_jit_misses`` — the §14/§15 jit-cache-stability
+  contract (pow2-padded shapes keep churn rounds on compiled code)
+  regressed to per-round retracing.
 
 Color comparisons only apply when the document's ``scale`` matches the
 baseline's (the weekly ``--scale small`` run still gets validity/error
@@ -40,6 +51,43 @@ import sys
 
 DEFAULT_BASELINE = "benchmarks/baseline_tiny.json"
 MIN_WORK_RATIO = 3.0  # conservative CI floor; the §14 test asserts >= 5
+# algorithms whose schema-6 records must carry a trace section (mirrors
+# benchmarks/run.py BACKEND_ALGS; hardcoded to keep this gate stdlib-only)
+TRACED_ALGS = ("data_driven", "fused", "distance2", "dynamic")
+_TRACE_SERIES = ("live", "retired", "conflicts", "max_color", "cells")
+
+
+def _check_trace_section(where: str, t: dict, fails: list[str]) -> None:
+    """Schema/row-invariant integrity of one record's ``trace`` section."""
+    missing = [k for k in _TRACE_SERIES + ("supersteps", "tail_step",
+                                           "series_from") if k not in t]
+    if missing:
+        fails.append(f"{where}: trace section missing {missing}")
+        return
+    lens = {k: len(t[k]) for k in _TRACE_SERIES}
+    if len(set(lens.values())) > 1:
+        fails.append(f"{where}: trace series lengths differ: {lens}")
+        return
+    if t["supersteps"] < 0 or (t["live"] and t["supersteps"] == 0):
+        fails.append(f"{where}: trace supersteps {t['supersteps']} "
+                     "inconsistent with non-empty series")
+    for i, (li, re, co) in enumerate(zip(t["live"], t["retired"],
+                                         t["conflicts"])):
+        if li < 0 or re < 0 or co < 0:
+            fails.append(f"{where}: trace row {i} has a negative entry")
+            break
+        if re + co != li:
+            fails.append(
+                f"{where}: trace row {i} breaks retired + conflicts == live "
+                f"({re} + {co} != {li})")
+            break
+
+
+def _tail_norm(step) -> float:
+    """Tail-trigger step ordered for regression checks: -1 (never) sorts
+    as +inf, so 'tail now fires where it previously never did' and 'tail
+    fires earlier than before' both compare as regressions."""
+    return float("inf") if step is None or step < 0 else float(step)
 
 
 def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
@@ -93,11 +141,36 @@ def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
                     f"{where}: {field} regressed "
                     f"{base_rec[field]} -> {rec[field]}")
 
+    schema6 = doc.get("schema", 0) >= 6
     for alg, per_graph in doc.get("algorithms", {}).items():
         base_alg = baseline.get("algorithms", {}).get(alg, {})
         for name, rec in per_graph.items():
             quality("algorithm", alg, name, rec, "colors",
                     base_alg.get(name))
+            if not schema6 or "error" in rec:
+                continue
+            where = f"algorithm {alg}/{name}"
+            t = rec.get("trace")
+            if alg in TRACED_ALGS and t is None:
+                fails.append(f"{where}: schema-6 record of a traced "
+                             "algorithm missing its 'trace' section")
+            elif t is not None:
+                _check_trace_section(where, t, fails)
+            base_rec = base_alg.get(name)
+            if t and base_rec and same_scale:
+                if ("supersteps" in base_rec
+                        and t.get("supersteps", 0) > base_rec["supersteps"]):
+                    fails.append(
+                        f"{where}: supersteps regressed "
+                        f"{base_rec['supersteps']} -> {t['supersteps']}")
+                if ("tail_step" in base_rec
+                        and _tail_norm(t.get("tail_step"))
+                        < _tail_norm(base_rec["tail_step"])):
+                    fails.append(
+                        f"{where}: serial tail triggers at step "
+                        f"{t.get('tail_step')} (baseline "
+                        f"{base_rec['tail_step']}; earlier = more "
+                        "serialized work)")
     for name, rec in doc.get("bipartite", {}).items():
         quality("bipartite", "", name, rec, "groups",
                 baseline.get("bipartite", {}).get(name))
@@ -109,20 +182,38 @@ def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
             fails.append(
                 f"dynamic {name}: work_ratio {rec['work_ratio']} below the "
                 f"frontier-proportionality floor {floor}")
+        if schema6 and "error" not in rec:
+            if "rounds_detail" not in rec or "jit" not in rec:
+                fails.append(
+                    f"dynamic {name}: schema-6 record missing its "
+                    "rounds_detail/jit sections")
+            else:
+                cap = (base_rec or {}).get("max_jit_misses")
+                misses = rec["jit"].get("misses", 0)
+                if cap is not None and misses > cap:
+                    fails.append(
+                        f"dynamic {name}: jit misses {misses} exceed the "
+                        f"baseline cap {cap} — churn rounds are retracing "
+                        "instead of hitting the jit cache")
     return fails, notes
 
 
 def make_baseline(docs: list[dict]) -> dict:
     """Distill produced documents into the checked-in baseline shape."""
-    out: dict = {"schema": 5, "scale": None, "algorithms": {},
+    out: dict = {"schema": 6, "scale": None, "algorithms": {},
                  "bipartite": {}, "dynamic": {}}
     for doc in docs:
         out["scale"] = doc.get("scale", out["scale"])
         for alg, per_graph in doc.get("algorithms", {}).items():
             slot = out["algorithms"].setdefault(alg, {})
             for name, rec in per_graph.items():
-                if "colors" in rec:
-                    slot[name] = {"colors": rec["colors"]}
+                if "colors" not in rec:
+                    continue
+                slot[name] = {"colors": rec["colors"]}
+                t = rec.get("trace")
+                if t and "supersteps" in t:
+                    slot[name]["supersteps"] = t["supersteps"]
+                    slot[name]["tail_step"] = t.get("tail_step", -1)
         for name, rec in doc.get("bipartite", {}).items():
             if "groups" in rec:
                 out["bipartite"][name] = {"groups": rec["groups"]}
@@ -132,6 +223,9 @@ def make_baseline(docs: list[dict]) -> dict:
                     "colors": rec["colors"],
                     "min_work_ratio": MIN_WORK_RATIO,
                 }
+                if "jit" in rec:
+                    out["dynamic"][name]["max_jit_misses"] = (
+                        rec["jit"].get("misses", 0))
     return out
 
 

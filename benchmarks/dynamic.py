@@ -25,12 +25,18 @@ CHURN_GRAPHS = ("rmat-g", "G3_circuit", "europe.osm")
 
 
 def _churn_once(name: str, scale: float, rounds: int = 4,
-                backend: str | None = None) -> dict:
+                backend: str | None = None, trace: bool = False):
     """One graph's churn record: steady-state round times + work accounting.
 
     Per-round wall is the MIN across rounds (the §14 pow2-shape padding
     makes round 1+ hit the jit cache, so the min is the steady-state serve
     cost and round 0 carries the one-time compile for both paths).
+
+    ``trace=True`` (schema 6) opens the session with §16 tracing and adds
+    ``rounds_detail`` — per round: frontier size, engine work, superstep
+    count, tail-trigger step, and whether the recolor hit the jit cache —
+    plus a ``jit`` hits/misses section from ``session.metrics()``; the
+    return becomes ``(record, last_round_trace)``.
     """
     from repro.core import color_data_driven
     from repro.dynamic import churn_delta, open_session
@@ -38,11 +44,14 @@ def _churn_once(name: str, scale: float, rounds: int = 4,
 
     g = build_graph(name, scale)
     rng = np.random.default_rng(14)
-    session = open_session(g, backend=backend)
+    session = open_session(g, backend=backend, trace=trace)
     w_inc = w_cold = frontier = 0
     t_inc, t_cold = [], []
     valid = True
-    for _ in range(rounds):
+    detail = []
+    last_trace = None
+    prev_hits = 0
+    for i in range(rounds):
         rem, add = churn_delta(session.graph, CHURN, rng)
         dirty = session.apply_delta(remove_edges=rem, add_edges=add)
         frontier += int(dirty.size)
@@ -56,7 +65,20 @@ def _churn_once(name: str, scale: float, rounds: int = 4,
         w_inc += inc.work_items
         w_cold += cold.work_items
         valid &= session.validate()
-    return {
+        if trace:
+            m = session.metrics()
+            hit = m["engine_cache_hits"] > prev_hits
+            prev_hits = m["engine_cache_hits"]
+            last_trace = inc.trace
+            detail.append({
+                "round": i,
+                "frontier": int(dirty.size),
+                "work": int(inc.work_items),
+                "supersteps": int(last_trace.iterations),
+                "tail_step": last_trace.tail_step,
+                "cache_hit": bool(hit),
+            })
+    rec = {
         "n": g.n,
         "m": g.m,
         "churn": CHURN,
@@ -70,6 +92,13 @@ def _churn_once(name: str, scale: float, rounds: int = 4,
         "seconds_inc": round(min(t_inc), 6),
         "seconds_cold": round(min(t_cold), 6),
     }
+    if not trace:
+        return rec
+    m = session.metrics()
+    rec["rounds_detail"] = detail
+    rec["jit"] = {"hits": m["engine_cache_hits"],
+                  "misses": m["engine_cache_misses"]}
+    return rec, last_trace
 
 
 def bench_dynamic_churn():
@@ -84,10 +113,20 @@ def bench_dynamic_churn():
     return rows
 
 
-def bench_dynamic_json(scale: float, backend: str | None = None) -> dict:
-    """The ``dynamic`` BENCH document section: one churn record per graph."""
-    return {name: _churn_once(name, scale, backend=backend)
-            for name in CHURN_GRAPHS}
+def bench_dynamic_json(scale: float, backend: str | None = None):
+    """The ``dynamic`` BENCH section (schema 6): churn records + traces.
+
+    Returns ``(records, runs)``: one churn record per suite graph (with
+    per-round detail and jit accounting) and the last-round recolor
+    ``RunTrace`` per graph for the Chrome-trace export.
+    """
+    records, runs = {}, {}
+    for name in CHURN_GRAPHS:
+        rec, rt = _churn_once(name, scale, backend=backend, trace=True)
+        records[name] = rec
+        if rt is not None:
+            runs[f"dynamic/{name}"] = rt
+    return records, runs
 
 
 DYNAMIC_BENCHES = (bench_dynamic_churn,)

@@ -4,6 +4,13 @@ Every function returns rows (name, us_per_call, derived).  Quality numbers
 (colors, iterations) are hardware-independent and reproduce the paper's
 claims directly; runtimes are CPU-host wall-clock (the serial oracle runs on
 the same host, so the *ratios* are the meaningful quantity, as in the paper).
+
+This module IS wired into the harness (audited for PR §16): ``run.py``'s
+CSV matrix iterates ``ALL_BENCHES`` on every non ``--json-only`` run, and
+the weekly CI job (``--scale small`` without ``--json-only``) executes the
+full set.  Step-level telemetry for these runs lives in the schema-6 JSON
+documents (``trace`` sections + the ``_trace.json`` Chrome export), not in
+the CSV rows.
 """
 from __future__ import annotations
 

@@ -40,6 +40,22 @@ moved and achieved bytes/s per degree class (``benchmarks/roofline.py``'s
 coloring model).  Colors are bit-identical across backends, so the pallas
 document gates against the SAME baseline; CI's artifact is
 ``BENCH_coloring_pallas.json``.
+
+Schema 6 adds the §16 telemetry: every record of an algorithm that takes
+the ``trace=`` knob (``BACKEND_ALGS``) carries a ``trace`` section — the
+``RunTrace.summary()`` per-step series (live/retired/conflicts/max_color/
+cells), superstep count, and tail-trigger step — captured from one extra
+UNTIMED traced call so the timed numbers stay on the untraced (bit-
+identical, zero-cost) path.  ``--engine dynamic`` records gain
+``rounds_detail`` (per churn round: frontier, work, supersteps, tail step,
+jit cache hit) and a ``jit`` hits/misses section from
+``session.metrics()``.  Alongside the document a Chrome-trace
+(Perfetto-loadable) export of the same runs is written to
+``<JSON_PATH stem>_trace.json`` (so CI's ``BENCH_coloring*.json`` artifact
+glob picks it up); ``python -m repro.obs.report <either file>`` re-renders
+both.  ``benchmarks/check_regression.py`` gates the new sections: missing
+trace, superstep-count regressions, earlier tail triggers, broken row
+invariants, and dynamic jit-miss growth all fail CI.
 """
 from __future__ import annotations
 
@@ -99,7 +115,7 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
     graphs = {name: build_graph(name, json_scale) for name in JSON_GRAPHS}
     doc = {
-        "schema": 5,
+        "schema": 6,
         "scale": json_scale,
         "engine": engine,
         "backend": backend,
@@ -110,6 +126,7 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
         "algorithms": {},
         "bipartite": {},
     }
+    chrome_runs = {}
     for alg in api.algorithms():
         if alg == "bipartite":  # needs a BipartiteGraph; measured below
             continue
@@ -138,6 +155,13 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
                 # pack_degrees fusion), so it moves split-size cells
                 rec["roofline"] = coloring_roofline(
                     r, seconds, packed=(backend != "pallas"))
+            if alg in BACKEND_ALGS:
+                # one extra UNTIMED traced call (schema 6): the timed
+                # numbers above stay on the untraced zero-cost path
+                rt = api.color(g, algorithm=alg, trace=True, **opts).trace
+                if rt is not None:
+                    rec["trace"] = rt.summary()
+                    chrome_runs[f"{alg}/{name}"] = rt
             per_graph[name] = rec
         doc["algorithms"][alg] = per_graph
     band = 2
@@ -154,7 +178,24 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
+    if chrome_runs:
+        _write_chrome_trace(path, chrome_runs)
     return doc
+
+
+def _write_chrome_trace(json_path: str, runs: dict) -> str:
+    """Perfetto-loadable sibling of a BENCH document (schema 6).
+
+    Named ``<stem>_trace.json`` so CI's ``BENCH_coloring*.json`` artifact
+    glob uploads it alongside the document it mirrors.
+    """
+    from repro.obs.export import export_chrome_trace
+
+    stem = json_path[:-5] if json_path.endswith(".json") else json_path
+    trace_path = f"{stem}_trace.json"
+    export_chrome_trace(trace_path, runs)
+    print(f"# wrote {trace_path} ({len(runs)} traced runs)", file=sys.stderr)
+    return trace_path
 
 
 ENGINES = ("ragged", "padded", "classic", "sharded", "dynamic")
@@ -166,16 +207,19 @@ def bench_dynamic_json_doc(path: str = JSON_PATH,
     from benchmarks.dynamic import bench_dynamic_json
 
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
+    records, runs = bench_dynamic_json(json_scale, backend=backend)
     doc = {
-        "schema": 5,
+        "schema": 6,
         "scale": json_scale,
         "engine": "dynamic",
         "backend": backend,
-        "dynamic": bench_dynamic_json(json_scale, backend=backend),
+        "dynamic": records,
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
+    if runs:
+        _write_chrome_trace(path, runs)
     return doc
 
 

@@ -7,6 +7,11 @@ server groups requests into batches of B and colors every batch with ONE
 jitted device program (``repro.color_batch`` -> ``core/batch.py``), then
 compares throughput against the naive per-request loop.  Every response is
 validated and bit-identical to what the per-request fused path would return.
+
+Per-request summaries and the closing per-super-step table come from
+``repro.obs`` (§16): one untimed traced re-run of the first batch feeds
+``format_result`` / ``format_trace``, so the demo shows the same telemetry
+the benchmarks export without perturbing the timed comparison.
 """
 import argparse
 import sys
@@ -18,6 +23,7 @@ import repro  # noqa: E402
 from repro.core import is_valid_coloring  # noqa: E402
 from repro.core.batch import color_batch_fused  # noqa: E402
 from repro.graphs import serving_mix  # noqa: E402
+from repro.obs.report import format_result, format_trace  # noqa: E402
 
 
 def main():
@@ -61,6 +67,14 @@ def main():
     print(f"all proper={ok}  bit-identical to loop={identical}")
     colors = sorted(r.num_colors for r in batch_results)
     print(f"colors used per graph: min={colors[0]} max={colors[-1]}")
+
+    # ---- telemetry: untimed traced re-run of the first batch (§16) ----------
+    traced = color_batch_fused(batches[0], trace=True)
+    print("\nfirst batch, per request:")
+    for i, r in enumerate(traced):
+        print("  " + format_result(f"request[{i}]", r))
+    print("\nrequest[0], per super-step:")
+    print(format_trace(traced[0].trace))
 
 
 if __name__ == "__main__":

@@ -8,6 +8,12 @@ same number of fresh edges inserted each round).  A ``ColoringSession``
 absorbs each delta with a frontier-sized incremental ``recolor()`` while a
 naive server re-runs the cold fused engine from scratch; both are validated
 every round and the work/wall ratios are reported.
+
+Reporting goes through ``repro.obs`` (§16): the session is opened with
+``trace=True``, per-round lines come from ``format_result``, the closing
+block is ``session.metrics()`` via ``format_metrics``, and the last round's
+per-super-step table and phase spans are rendered with ``format_trace`` /
+``format_spans``.
 """
 import argparse
 import sys
@@ -21,6 +27,12 @@ import repro  # noqa: E402
 from repro.core import color_data_driven, is_valid_coloring  # noqa: E402
 from repro.dynamic import churn_delta  # noqa: E402
 from repro.graphs import build_graph  # noqa: E402
+from repro.obs.report import (  # noqa: E402
+    format_metrics,
+    format_result,
+    format_spans,
+    format_trace,
+)
 
 
 def main():
@@ -33,14 +45,13 @@ def main():
     rng = np.random.default_rng(0)
 
     g = build_graph(args.graph, args.scale)
-    session = repro.open_session(g)
+    session = repro.open_session(g, trace=True)
     print(f"{args.graph}: n={g.n} m={g.m // 2} edges, "
           f"{args.churn:.1%} churn x {args.rounds} rounds\n")
-    print(f"cold start: {session.result.num_colors} colors, "
-          f"work={session.result.work_items}\n")
+    print(format_result("cold start", session.result) + "\n")
 
     t_inc = t_cold = 0.0
-    w_inc = w_cold = 0
+    last = None
     for r in range(args.rounds):
         rem, add = churn_delta(session.graph, args.churn, rng)
         dirty = session.apply_delta(remove_edges=rem, add_edges=add)
@@ -55,20 +66,21 @@ def main():
 
         ok = session.validate() and is_valid_coloring(session.graph,
                                                       cold.colors)
-        w_inc += inc.work_items
-        w_cold += cold.work_items
-        print(f"round {r}: frontier={dirty.size:5d}  "
-              f"inc work={inc.work_items:7d} ({inc.num_colors} colors)  "
-              f"cold work={cold.work_items:7d} ({cold.num_colors} colors)  "
-              f"valid={ok}")
+        if inc.trace is not None and inc.trace.iterations:
+            last = inc
+        print(f"round {r}: frontier={dirty.size:5d}  valid={ok}")
+        print("  " + format_result("inc ", inc))
+        print("  " + format_result("cold", cold))
 
-    print(f"\ntotal work : incremental={w_inc}  cold={w_cold}  "
-          f"ratio={w_cold / max(w_inc, 1):.1f}x")
-    print(f"wall       : incremental={t_inc * 1e3:.0f} ms  "
+    m = session.metrics()
+    print(f"\nwall: incremental={t_inc * 1e3:.0f} ms  "
           f"cold={t_cold * 1e3:.0f} ms  "
           f"speedup={t_cold / max(t_inc, 1e-9):.1f}x")
-    print(f"overlay    : {session.delta.overlay_size} pending keys, "
-          f"{session.delta.compactions} compactions")
+    print(format_metrics(m, "\nsession metrics:"))
+    if last is not None:
+        print("\nlast recolor, per super-step:")
+        print(format_trace(last.trace, last=8))
+        print("\n" + format_spans(last.trace.spans))
 
 
 if __name__ == "__main__":

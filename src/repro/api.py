@@ -117,6 +117,9 @@ def color_batch(
 ) -> "list[ColoringResult]":
     """Color many graphs; the serving-path entry point.
 
+    ``trace=True`` (supported by every algorithm here) attaches a per-run
+    ``RunTrace`` to each result — see ``repro.obs``.
+
     ``algorithm="fused"`` uses the batched engine: the graphs are packed into
     one stacked padded-adjacency layout and a single jitted ``while_loop``
     colors all of them concurrently (see ``core/batch.py``).  Any other name
@@ -127,7 +130,7 @@ def color_batch(
         from repro.core.batch import color_batch_fused, color_batch_sharded
 
         supported = {"heuristic", "firstfit", "use_kernel", "max_iters",
-                     "tail_serial", "engine", "devices", "backend"}
+                     "tail_serial", "engine", "devices", "backend", "trace"}
         extra = set(opts) - supported
         if extra:
             raise ValueError(

@@ -50,6 +50,13 @@ from repro.core.coloring import (
     sgr_step,
 )
 from repro.core.csr import CSRGraph, next_pow2
+from repro.obs.spans import SpanRecorder, jit_span, span
+from repro.obs.trace import (
+    assemble_trace,
+    empty_trace,
+    resolve_trace_cap,
+    ring_rows,
+)
 
 __all__ = ["GraphBatch", "SessionBatch", "batched_sgr_step",
            "batched_ragged_step", "color_batch_fused", "color_batch_sharded",
@@ -157,10 +164,17 @@ def batched_ragged_step(adj, deg_ext, colors_ext, wl, *,
 
 
 @partial(jax.jit, static_argnames=("heuristic", "kind", "use_kernel",
-                                   "tail_enabled", "pack_degrees"))
+                                   "tail_enabled", "pack_degrees",
+                                   "trace_cap"))
 def _run_batch(adj, deg_ext, sizes, thrs, max_iters, *, heuristic, kind,
-               use_kernel, tail_enabled, pack_degrees=False):
-    """Speculative phase: per-graph freeze on threshold/stall (§12)."""
+               use_kernel, tail_enabled, pack_degrees=False, trace_cap=0):
+    """Speculative phase: per-graph freeze on threshold/stall (§12).
+
+    ``trace_cap`` (§16, static) threads a ``(cap, B, 3)`` ring through the
+    carry recording ``[live_in, live_out, max_color]`` per graph per global
+    step (``live_in = -1`` marks a frozen/finished graph); ``trace_cap=0``
+    compiles the identical pre-§16 program.
+    """
     B, n_max, _ = adj.shape
     ids = jnp.arange(n_max, dtype=jnp.int32)
     in_graph = ids[None, :] < sizes[:, None]
@@ -175,11 +189,10 @@ def _run_batch(adj, deg_ext, sizes, thrs, max_iters, *, heuristic, kind,
     active0 = counts0 > (thrs if tail_enabled else 0)
 
     def cond(state):
-        _, _, _, _, active, _, _, it = state
-        return jnp.any(active) & (it < max_iters)
+        return jnp.any(state[4]) & (state[7] < max_iters)
 
     def body(state):
-        colors_ext, wl, counts, prev, active, iters_b, work_b, it = state
+        colors_ext, wl, counts, prev, active, iters_b, work_b, it = state[:8]
         wl_in = jnp.where(active[:, None], wl, n_max)
         colors_ext, wl_new, cnt_new = batched_ragged_step(
             adj, deg_ext, colors_ext, wl_in,
@@ -191,16 +204,26 @@ def _run_batch(adj, deg_ext, sizes, thrs, max_iters, *, heuristic, kind,
         wl = jnp.where(active[:, None], wl_new, wl)
         iters_b = iters_b + active.astype(jnp.int32)
         work_b = work_b + jnp.where(active, cnt_new, 0)
-        it = it + 1
-        still = active & (new_counts > 0) & (it < max_iters)
+        out = (colors_ext, wl, new_counts, new_prev, active, iters_b,
+               work_b, it + 1)
+        if trace_cap:
+            row = jnp.stack(
+                [jnp.where(active, counts, -1),
+                 jnp.where(active, cnt_new, -1),
+                 jnp.max(colors_ext[:, :-1], axis=1)], axis=-1,
+            ).astype(jnp.int32)
+            idx = lax.rem(it - 1, jnp.int32(trace_cap))
+            out = out + (state[8].at[idx].set(row),)
+        still = active & (new_counts > 0) & (it + 1 < max_iters)
         if tail_enabled:
             still &= (new_counts > thrs) & ~_stalled(iters_b, new_counts,
                                                      new_prev)
-        return (colors_ext, wl, new_counts, new_prev, still, iters_b,
-                work_b, it)
+        return out[:4] + (still,) + out[5:]
 
     state = (colors0, wl0, counts0, counts0, active0, iters0, zeros,
              jnp.int32(1))
+    if trace_cap:
+        state = state + (jnp.zeros((trace_cap, B, 3), jnp.int32),)
     return lax.while_loop(cond, body, state)
 
 
@@ -236,8 +259,15 @@ def color_batch_fused(
     distance2: bool = False,
     tail_serial="auto",
     backend: str | None = None,
+    trace=False,
 ) -> list[ColoringResult]:
     """Color B graphs in ONE jitted batched ``while_loop``; one result each.
+
+    ``trace=True`` (§16) attaches a per-graph ``RunTrace`` to every result,
+    assembled from one shared on-device ring over the batched loop — each
+    graph's rows cover exactly the global steps it was live in, so frozen
+    capacity steps (charged to ``padded_work``) do NOT appear in its
+    ``cells`` series (the trace sum is a lower bound there).
 
     ``backend="pallas"`` routes the vmapped rotated super-step through the
     fused Pallas kernel (§15; the kernel vmaps over the batch axis in both
@@ -295,6 +325,7 @@ def color_batch_fused(
                     heuristic=heuristic, firstfit=firstfit,
                     use_kernel=use_kernel, max_iters=max_iters,
                     distance2=distance2, tail_serial=tail_serial,
+                    trace=trace,
                 )
                 for i, r in zip(idxs, sub):
                     results[i] = r
@@ -304,53 +335,101 @@ def color_batch_fused(
     if batch.B == 0:
         return []
     if batch.n_max == 0:
-        return [ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True, algo)
-                for _ in range(batch.B)]
+        out = [ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True, algo)
+               for _ in range(batch.B)]
+        if trace:
+            for r in out:
+                r.trace = empty_trace(algo)
+        return out
     max_iters = max_iters or batch.n_max + 1
-    sizes = jnp.asarray(np.asarray(batch.sizes, dtype=np.int32))
-    tail_enabled, _ = resolve_tail_threshold(tail_serial, batch.n_max)
-    thrs_np = np.asarray(
-        [resolve_tail_threshold(tail_serial, n)[1] for n in batch.sizes],
-        dtype=np.int32,
-    )
-    colors_ext, wl, counts, prev, _, iters_b, work_b, it = _run_batch(
-        batch.adj, batch.deg_ext, sizes, jnp.asarray(thrs_np),
-        jnp.int32(max_iters),
-        heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
-        tail_enabled=tail_enabled,
-        # degrees <= packed width and colors <= width + 1 (see coloring.py)
-        pack_degrees=batch.width < 2**15 - 1,
-    )
-    counts = np.asarray(counts)
-    prev = np.asarray(prev)
-    iters_b = np.asarray(iters_b).copy()
-    work_b = np.asarray(work_b).copy()
-    steps = int(it) - 1
-    sizes_np = np.asarray(batch.sizes, dtype=np.int32)
-    run_tail = tail_enabled & (counts > 0) & (iters_b < max_iters)
-    stalled = run_tail & (counts > thrs_np) & _stalled(iters_b, counts, prev)
-    if run_tail.any():
-        colors_ext = _run_batch_tail(
-            batch.adj, batch.deg_ext, colors_ext, wl, jnp.asarray(run_tail),
-            jnp.asarray(stalled), jnp.asarray(sizes_np), kind=firstfit,
+    trace_cap = resolve_trace_cap(trace, max_iters)
+
+    def run():
+        sizes = jnp.asarray(np.asarray(batch.sizes, dtype=np.int32))
+        tail_enabled, _ = resolve_tail_threshold(tail_serial, batch.n_max)
+        thrs_np = np.asarray(
+            [resolve_tail_threshold(tail_serial, n)[1] for n in batch.sizes],
+            dtype=np.int32,
         )
-        iters_b += run_tail
-        work_b += np.where(stalled, sizes_np, np.where(run_tail, counts, 0))
-        counts = np.where(run_tail, 0, counts)
-    colors = np.asarray(colors_ext[:, : batch.n_max])
-    cells = batch.n_max * batch.width
-    out = []
-    for b, n in enumerate(batch.sizes):
-        # the bootstrap step processes all n vertices; work_b accumulates the
-        # live counts of every later step (mirrors the fused driver)
-        out.append(ColoringResult(
-            colors[b, :n].copy(),
-            int(iters_b[b]),
-            int(work_b[b]) + n if n else 0,
-            steps * cells + (cells if run_tail[b] else 0),
-            converged=int(counts[b]) == 0,
-            algorithm=algo,
-        ))
+        pack = batch.width < 2**15 - 1
+        loop_key = ("batch", batch.B, batch.n_max, batch.width, heuristic,
+                    firstfit, use_kernel, tail_enabled, pack, max_iters,
+                    trace_cap)
+        with span("superstep_loop", mode="batched", B=batch.B), \
+                jit_span("batched_loop", loop_key):
+            state = _run_batch(
+                batch.adj, batch.deg_ext, sizes, jnp.asarray(thrs_np),
+                jnp.int32(max_iters),
+                heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
+                tail_enabled=tail_enabled,
+                # degrees <= packed width, colors <= width + 1 (coloring.py)
+                pack_degrees=pack, trace_cap=trace_cap,
+            )
+        colors_ext, wl, counts, prev, _, iters_b, work_b, it = state[:8]
+        counts = np.asarray(counts)
+        prev = np.asarray(prev)
+        iters_b = np.asarray(iters_b).copy()
+        work_b = np.asarray(work_b).copy()
+        steps = int(it) - 1
+        ordered = ring_rows(np.asarray(state[8]), steps) if trace_cap else None
+        sizes_np = np.asarray(batch.sizes, dtype=np.int32)
+        run_tail = tail_enabled & (counts > 0) & (iters_b < max_iters)
+        stalled = (run_tail & (counts > thrs_np)
+                   & _stalled(iters_b, counts, prev))
+        counts_pre = counts.copy()
+        if run_tail.any():
+            with span("serial_tail", live=int(counts[run_tail].sum())):
+                colors_ext = _run_batch_tail(
+                    batch.adj, batch.deg_ext, colors_ext, wl,
+                    jnp.asarray(run_tail), jnp.asarray(stalled),
+                    jnp.asarray(sizes_np), kind=firstfit,
+                )
+            iters_b += run_tail
+            work_b += np.where(stalled, sizes_np,
+                               np.where(run_tail, counts, 0))
+            counts = np.where(run_tail, 0, counts)
+        colors = np.asarray(colors_ext[:, : batch.n_max])
+        cells = batch.n_max * batch.width
+        out = []
+        for b, n in enumerate(batch.sizes):
+            # the bootstrap step processes all n vertices; work_b accumulates
+            # the live counts of every later step (mirrors the fused driver)
+            res = ColoringResult(
+                colors[b, :n].copy(),
+                int(iters_b[b]),
+                int(work_b[b]) + n if n else 0,
+                steps * cells + (cells if run_tail[b] else 0),
+                converged=int(counts[b]) == 0,
+                algorithm=algo,
+            )
+            if trace_cap:
+                # per-graph rows from the shared (cap, B, 3) ring; a graph's
+                # live steps are a PREFIX of the global steps, so its kept
+                # rows stay contiguous — drop the boot row whenever the ring
+                # overwrote any of its early live steps
+                spec = [(int(r[b, 0]), int(r[b, 1]), int(r[b, 2]))
+                        for r in ordered if int(r[b, 0]) >= 0]
+                k_b = int(iters_b[b]) - (1 if n else 0) - int(run_tail[b])
+                rows_b = ([(n, 0, n, 1, 0, 0, 0, 0)]
+                          if n and len(spec) == k_b else [])
+                rows_b += [(li, li - lo, lo, mc, cells, 0, 0, 0)
+                           for li, lo, mc in spec]
+                if run_tail[b]:
+                    rows_b.append((int(counts_pre[b]), int(counts_pre[b]), 0,
+                                   int(colors[b, :n].max(initial=0)),
+                                   cells, 1, 0, 0))
+                res.trace = assemble_trace(rows_b, int(iters_b[b]),
+                                           trace_cap, algo)
+            out.append(res)
+        return out
+
+    if not trace:
+        return run()
+    with SpanRecorder() as rec:
+        out = run()
+    for r in out:
+        if r.trace is not None:
+            r.trace.spans = rec.events
     return out
 
 
@@ -415,6 +494,7 @@ def color_batch_sharded(
     distance2: bool = False,
     tail_serial="auto",
     backend: str | None = None,
+    trace=False,
 ) -> list[ColoringResult]:
     """Place a multi-graph batch across devices (§13 batch placement).
 
@@ -435,7 +515,7 @@ def color_batch_sharded(
     graphs = list(graphs)
     B = len(graphs)
     opts = dict(heuristic=heuristic, firstfit=firstfit,
-                max_iters=max_iters, tail_serial=tail_serial)
+                max_iters=max_iters, tail_serial=tail_serial, trace=trace)
     if ndev <= 1 or B == 0:
         return color_batch_fused(graphs, distance2=distance2,
                                  use_kernel=use_kernel, backend=backend,

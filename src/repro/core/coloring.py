@@ -51,6 +51,14 @@ from repro.api import register
 from repro.core.csr import CSRGraph, DeviceCSR, auto_tile_thresholds, next_pow2
 from repro.core.firstfit import FF_FUNCS
 from repro.core.heuristics import conflict_lose_flags, conflict_lose_lanes
+from repro.obs.spans import SpanRecorder, jit_span, span
+from repro.obs.trace import (
+    assemble_trace,
+    empty_trace,
+    resolve_trace_cap,
+    ring_init,
+    ring_rows,
+)
 
 __all__ = [
     "ColoringResult",
@@ -103,6 +111,10 @@ class ColoringResult:
     # final full-width entry).  Partitions ``padded_work`` — the roofline
     # model (benchmarks/roofline.py) turns it into bytes moved per class.
     class_cells: tuple = ()
+    # per-super-step telemetry (§16): a ``repro.obs.RunTrace`` when the run
+    # was traced (``trace=True``), else None.  ``trace`` is a STATIC knob —
+    # untraced runs compile the identical program and stay bit-identical.
+    trace: object = None
 
     @property
     def num_colors(self) -> int:
@@ -490,6 +502,7 @@ def run_ragged_engine(
     colors_init=None,
     stall_serializes_all: bool = True,
     class_counts=None,
+    trace=False,
 ) -> ColoringResult:
     """Drive the rotated super-step to convergence over degree-tiled classes.
 
@@ -515,6 +528,12 @@ def run_ragged_engine(
     (callers pad to a power of two so jit cache keys repeat across calls);
     sentinel lanes are inert everywhere, so only the accounting and the
     tail/stall thresholds need the honest numbers.
+
+    ``trace`` (§16) records one telemetry row per super-step into a bounded
+    ring (``True`` = default capacity, an int = explicit capacity) and
+    attaches the assembled ``repro.obs.RunTrace`` to the result.  The knob
+    is static: ``trace=False`` dispatches the exact pre-§16 programs, so
+    untraced runs stay bit-identical and pay nothing.
     """
     caps0 = [int(c.shape[0]) for c in classes]
     counts_init = (caps0 if class_counts is None
@@ -537,12 +556,15 @@ def run_ragged_engine(
             ).astype(jnp.int32)
             boot_iters = 1
 
+    trace_cap = resolve_trace_cap(trace, max_iters)
+    trace_label = f"{algorithm}:{mode}"
     if mode == "fused":
         return _run_ragged_fused(
             n, provider, deg_ext, classes, tile_widths, acc_widths,
             tail_width, colors_ext, boot_iters, heuristic, kind, use_kernel,
             coarsen, coarsen_lanes, tail_enabled, tail_threshold, max_iters,
             algorithm, pack_degrees, counts_init, stall_serializes_all,
+            trace_cap=trace_cap,
         )
     if mode != "workefficient":
         raise ValueError(f"unknown mode {mode!r}")
@@ -558,33 +580,48 @@ def run_ragged_engine(
     total = sum(counts)
     prev = total
     stalled = False
-    while total > 0 and iters < max_iters:
-        if tail_enabled and total <= tail_threshold:
-            break
-        if tail_enabled and _stalled(iters, total, prev):
-            stalled = True
-            break
-        prev = total
-        sliced, chunk_l = [], []
-        for k in range(K):
-            cap = min(next_pow2(max(counts[k], 1)), caps[k])
-            sliced.append(wls[k][:cap])
-            chunk_l.append(max(1, math.ceil(cap / coarsen_lanes))
-                           if coarsen_lanes else coarsen)
-            work += counts[k]
-            if counts[k]:
-                padded += cap * acc_widths[k]
-                cells_k[k] += cap * acc_widths[k]
-        colors_ext, new_wls, cnts = provider_tiled_superstep(
-            provider, deg_ext, colors_ext, tuple(sliced),
-            widths=tuple(tile_widths), heuristic=heuristic, kind=kind,
-            use_kernel=use_kernel, chunks=tuple(chunk_l),
-            pack_degrees=pack_degrees,
-        )
-        wls = list(new_wls)
-        counts = [int(c) for c in cnts]
-        iters += 1
-        total = sum(counts)
+    rows = []  # (§16) one telemetry row per super-step when tracing
+    if trace_cap and boot_iters:
+        rows.append((n, 0, n, 1, 0, 0, 0, 0))
+    with span("superstep_loop", mode=mode):
+        while total > 0 and iters < max_iters:
+            if tail_enabled and total <= tail_threshold:
+                break
+            if tail_enabled and _stalled(iters, total, prev):
+                stalled = True
+                break
+            prev = total
+            sliced, chunk_l = [], []
+            step_cells = 0
+            for k in range(K):
+                cap = min(next_pow2(max(counts[k], 1)), caps[k])
+                sliced.append(wls[k][:cap])
+                chunk_l.append(max(1, math.ceil(cap / coarsen_lanes))
+                               if coarsen_lanes else coarsen)
+                work += counts[k]
+                if counts[k]:
+                    padded += cap * acc_widths[k]
+                    cells_k[k] += cap * acc_widths[k]
+                    step_cells += cap * acc_widths[k]
+            shapes = tuple(int(s.shape[0]) for s in sliced)
+            with jit_span("superstep", ("tiled", type(provider).__name__,
+                                        shapes, tuple(tile_widths), heuristic,
+                                        kind, use_kernel, tuple(chunk_l),
+                                        pack_degrees, n)):
+                colors_ext, new_wls, cnts = provider_tiled_superstep(
+                    provider, deg_ext, colors_ext, tuple(sliced),
+                    widths=tuple(tile_widths), heuristic=heuristic, kind=kind,
+                    use_kernel=use_kernel, chunks=tuple(chunk_l),
+                    pack_degrees=pack_degrees,
+                )
+            wls = list(new_wls)
+            counts = [int(c) for c in cnts]
+            iters += 1
+            new_total = sum(counts)
+            if trace_cap:
+                rows.append((total, total - new_total, new_total,
+                             int(jnp.max(colors_ext)), step_cells, 0, 0, 0))
+            total = new_total
     converged = total == 0
     tail_cells = 0
     if total > 0 and iters < max_iters and tail_enabled:
@@ -598,28 +635,48 @@ def run_ragged_engine(
             )
             tail_np = np.full(min(next_pow2(total), n), n, np.int32)
             tail_np[:total] = live
-        tail_wl = order_tail(jnp.asarray(tail_np), deg_ext)
-        colors_ext = provider_tail(provider, colors_ext, tail_wl, kind=kind)
+        with span("serial_tail", live=total, stalled=stalled):
+            tail_wl = order_tail(jnp.asarray(tail_np), deg_ext)
+            colors_ext = provider_tail(provider, colors_ext, tail_wl,
+                                       kind=kind)
         work += n if stalled and stall_serializes_all else total
         tail_cells = int(tail_wl.shape[0]) * tail_width
         padded += tail_cells
         iters += 1
         converged = True
-    return ColoringResult(
+        if trace_cap:
+            # the tail drains the LIVE worklist (total entries); a
+            # stall-serialization additionally re-greedies settled vertices,
+            # which shows up in ``cells``/work, not in worklist membership
+            rows.append((total, total, 0, int(jnp.max(colors_ext)),
+                         tail_cells, 1, 0, 0))
+    result = ColoringResult(
         np.asarray(colors_ext[:n]), iters, work, padded, converged,
         algorithm=algorithm,
         class_cells=_class_cells(acc_widths, cells_k, tail_width, tail_cells),
     )
+    if trace_cap:
+        result.trace = assemble_trace(rows, iters, trace_cap, trace_label)
+    return result
 
 
 @partial(jax.jit, static_argnames=("tile_widths", "heuristic", "kind",
                                    "use_kernel", "chunks", "tail_enabled",
-                                   "max_iters", "boot_iters", "pack_degrees"))
+                                   "max_iters", "boot_iters", "pack_degrees",
+                                   "trace_cap", "cells_per_step"))
 def _fused_spec_loop(provider, deg_ext, colors_ext, wls, counts, thr, *,
                      tile_widths, heuristic, kind, use_kernel, chunks,
                      tail_enabled, max_iters, boot_iters=0,
-                     pack_degrees=False, prev0=None):
-    """The speculative phase as one ``lax.while_loop`` device program."""
+                     pack_degrees=False, prev0=None, trace_cap=0,
+                     cells_per_step=0):
+    """The speculative phase as one ``lax.while_loop`` device program.
+
+    ``trace_cap > 0`` (§16, a STATIC knob) threads a pre-allocated
+    ``(trace_cap, NF)`` int32 trace ring through the carry and records one
+    row per super-step at ``step % trace_cap``; with the default 0 the
+    carry and the compiled program are exactly the pre-§16 ones, so the
+    untraced path stays bit-identical and pays nothing.
+    """
     n = colors_ext.shape[0] - 1
     K = len(wls)
 
@@ -627,7 +684,7 @@ def _fused_spec_loop(provider, deg_ext, colors_ext, wls, counts, thr, *,
         return sum(counts, jnp.int32(0))
 
     def cond(state):
-        _, _, counts, it, _, prev = state
+        counts, it, prev = state[2], state[3], state[5]
         total = total_of(counts)
         go = (total > 0) & (it < max_iters)
         if tail_enabled:
@@ -635,7 +692,7 @@ def _fused_spec_loop(provider, deg_ext, colors_ext, wls, counts, thr, *,
         return go
 
     def body(state):
-        colors_ext, wls, counts, it, work, _ = state
+        colors_ext, wls, counts, it, work = state[:5]
         prev = total_of(counts)
         colors_ext, new_wls, new_counts = _tiled_superstep(
             provider, deg_ext, colors_ext, wls,
@@ -643,10 +700,19 @@ def _fused_spec_loop(provider, deg_ext, colors_ext, wls, counts, thr, *,
             use_kernel=use_kernel, chunks=chunks, pack_degrees=pack_degrees,
         )
         total = total_of(new_counts)
-        return (colors_ext, new_wls, new_counts, it + 1, work + total, prev)
+        out = (colors_ext, new_wls, new_counts, it + 1, work + total, prev)
+        if trace_cap:
+            z = jnp.int32(0)
+            row = jnp.stack([prev, prev - total, total, jnp.max(colors_ext),
+                             jnp.int32(cells_per_step), z, z, z])
+            idx = lax.rem(it - boot_iters, jnp.int32(trace_cap))
+            out = out + (state[6].at[idx].set(row),)
+        return out
 
     state = (colors_ext, wls, counts, jnp.int32(boot_iters), jnp.int32(0),
              jnp.int32(n if prev0 is None else prev0))
+    if trace_cap:
+        state = state + (ring_init(trace_cap),)
     return lax.while_loop(cond, body, state)
 
 
@@ -655,6 +721,7 @@ def _run_ragged_fused(
     colors_ext, boot_iters, heuristic, kind, use_kernel, coarsen,
     coarsen_lanes, tail_enabled, tail_threshold, max_iters, algorithm,
     pack_degrees=False, counts_init=None, stall_serializes_all=True,
+    trace_cap=0,
 ):
     K = len(classes)
     caps = [int(c.shape[0]) for c in classes]
@@ -668,15 +735,24 @@ def _run_ragged_fused(
         chunks = [max(1, math.ceil(c / coarsen_lanes)) for c in caps]
     wls0 = tuple(jnp.asarray(c) for c in classes)
     counts0 = tuple(jnp.int32(c) for c in counts_init)
-    colors_ext, wls, counts, it, work, prev = _fused_spec_loop(
-        provider, deg_ext, colors_ext, wls0, counts0,
-        jnp.int32(tail_threshold),
-        tile_widths=tuple(tile_widths), heuristic=heuristic, kind=kind,
-        use_kernel=use_kernel, chunks=tuple(chunks),
-        tail_enabled=tail_enabled, max_iters=max_iters,
-        boot_iters=boot_iters, pack_degrees=pack_degrees,
-        prev0=None if init_total == n else jnp.int32(init_total),
-    )
+    cells_per_step = sum(c * w for c, w in zip(caps, acc_widths))
+    loop_key = ("fused_spec", type(provider).__name__, tuple(caps),
+                tuple(tile_widths), heuristic, kind, use_kernel,
+                tuple(chunks), tail_enabled, max_iters, boot_iters,
+                pack_degrees, n, trace_cap)
+    with span("superstep_loop", mode="fused"), jit_span("fused_spec_loop",
+                                                        loop_key):
+        out = _fused_spec_loop(
+            provider, deg_ext, colors_ext, wls0, counts0,
+            jnp.int32(tail_threshold),
+            tile_widths=tuple(tile_widths), heuristic=heuristic, kind=kind,
+            use_kernel=use_kernel, chunks=tuple(chunks),
+            tail_enabled=tail_enabled, max_iters=max_iters,
+            boot_iters=boot_iters, pack_degrees=pack_degrees,
+            prev0=None if init_total == n else jnp.int32(init_total),
+            trace_cap=trace_cap, cells_per_step=cells_per_step,
+        )
+    colors_ext, wls, counts, it, work, prev = out[:6]
     total = int(sum(int(c) for c in counts))
     iters = int(it)
     work_items = int(work) + init_total
@@ -685,25 +761,40 @@ def _run_ragged_fused(
     padded = sum(cells_k)
     converged = total == 0
     tail_cells = 0
+    rows = []
+    if trace_cap:
+        if boot_iters:
+            rows.append((n, 0, n, 1, 0, 0, 0, 0))
+        rows.extend(tuple(int(v) for v in r)
+                    for r in ring_rows(np.asarray(out[6]), spec_steps))
     if total > 0 and iters < max_iters and tail_enabled:
         stalled = total > tail_threshold and bool(
             _stalled(iters, total, int(prev)))
-        if stalled and stall_serializes_all:
-            tail_wl = order_tail(jnp.arange(n, dtype=jnp.int32), deg_ext)
-        else:
-            combined = jnp.concatenate(list(wls)) if K > 1 else wls[0]
-            tail_wl = order_tail(combined, deg_ext)
-        colors_ext = provider_tail(provider, colors_ext, tail_wl, kind=kind)
+        with span("serial_tail", live=total, stalled=stalled):
+            if stalled and stall_serializes_all:
+                tail_wl = order_tail(jnp.arange(n, dtype=jnp.int32), deg_ext)
+            else:
+                combined = jnp.concatenate(list(wls)) if K > 1 else wls[0]
+                tail_wl = order_tail(combined, deg_ext)
+            colors_ext = provider_tail(provider, colors_ext, tail_wl,
+                                       kind=kind)
         work_items += n if stalled and stall_serializes_all else total
         tail_cells = int(tail_wl.shape[0]) * tail_width
         padded += tail_cells
         iters += 1
         converged = True
-    return ColoringResult(
+        if trace_cap:
+            rows.append((total, total, 0, int(jnp.max(colors_ext)),
+                         tail_cells, 1, 0, 0))
+    result = ColoringResult(
         np.asarray(colors_ext[:n]), iters, work_items, padded, converged,
         algorithm=algorithm,
         class_cells=_class_cells(acc_widths, cells_k, tail_width, tail_cells),
     )
+    if trace_cap:
+        result.trace = assemble_trace(rows, iters, trace_cap,
+                                      f"{algorithm}:fused")
+    return result
 
 
 # --------------------------------------------------------------------------
@@ -714,26 +805,41 @@ def _run_ragged_fused(
 # with ``sgr_step``; legacy distance-2 callers reuse them with the two-hop
 # super-step instead of copying the scaffolding.
 
-def run_fused_loop(step, colors_ext, wl0, count0, max_iters: int):
+def run_fused_loop(step, colors_ext, wl0, count0, max_iters: int,
+                   trace_cap: int = 0, cells_per_step: int = 0):
     """The whole coloring as ONE jitted ``lax.while_loop`` device program.
 
     Returns ``(colors_ext, wl, count, iters, work)`` where ``work`` is the
     sum of post-step live counts (the first full-capacity step is charged by
-    the caller, matching the paper's work accounting).
+    the caller, matching the paper's work accounting).  With ``trace_cap >
+    0`` (§16) a ``(trace_cap, NF)`` trace ring rides the carry — one row per
+    step at ``step % trace_cap`` — and is returned as a sixth element; the
+    default 0 compiles the pre-§16 five-element program unchanged.
     """
 
     @partial(jax.jit, static_argnames=())
     def run(colors_ext, wl, count):
         def cond(state):
-            _, _, count, it, _ = state
+            count, it = state[2], state[3]
             return (count > 0) & (it < max_iters)
 
         def body(state):
-            colors_ext, wl, count, it, work = state
+            colors_ext, wl, count, it, work = state[:5]
+            prev = count
             colors_ext, wl, count = step(colors_ext, wl)
-            return colors_ext, wl, count, it + 1, work + count
+            out = (colors_ext, wl, count, it + 1, work + count)
+            if trace_cap:
+                z = jnp.int32(0)
+                row = jnp.stack([prev, prev - count, count,
+                                 jnp.max(colors_ext),
+                                 jnp.int32(cells_per_step), z, z, z])
+                idx = lax.rem(it, jnp.int32(trace_cap))
+                out = out + (state[5].at[idx].set(row),)
+            return out
 
         state = (colors_ext, wl, count, jnp.int32(0), jnp.int32(0))
+        if trace_cap:
+            state = state + (ring_init(trace_cap),)
         return lax.while_loop(cond, body, state)
 
     return run(colors_ext, wl0, jnp.int32(count0))
@@ -877,6 +983,7 @@ def color_data_driven(
     tail_serial="auto",
     devices=None,
     backend: str | None = None,
+    trace=False,
 ) -> ColoringResult:
     """Color ``g`` with the paper's optimized data-driven SGR algorithm.
 
@@ -907,91 +1014,119 @@ def color_data_driven(
     most ``coarsen_lanes`` vertices speculate concurrently; later chunks
     observe earlier chunks' colors, exactly like CUDA blocks scheduled in
     waves.  Overrides ``coarsen_ff`` when set.
+
+    ``trace`` (§16) records per-super-step telemetry and host phase spans
+    into ``result.trace`` (a ``repro.obs.RunTrace``).  Static knob: the
+    default ``False`` dispatches the identical device programs, so untraced
+    results stay bit-identical and free of overhead.
     """
     from repro.kernels.dispatch import resolve_backend
 
     n = g.n
     if n == 0:
         resolve_backend(backend, use_kernel)  # validate even on the no-op
-        return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True)
+        result = ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True)
+        if trace:
+            result.trace = empty_trace("data_driven_sgr")
+        return result
     max_iters = max_iters or n + 1
-    if engine == "classic":
-        use_kernel = resolve_backend(backend, use_kernel) == "pallas"
-        return _color_classic(
-            g, heuristic, firstfit, use_kernel, coarsen_ff, coarsen_cr,
-            coarsen_lanes, buckets, mode, max_iters, reuse_rows,
-        )
-    if engine == "sharded":
-        # validate BEFORE the one-device fallback so the accepted option
-        # surface never depends on how many devices happen to be present
-        if use_kernel:
-            raise ValueError(
-                "engine='sharded' does not support use_kernel=True")
-        if coarsen_ff != 1 or coarsen_cr != 1 or coarsen_lanes:
-            raise ValueError(
-                "engine='sharded' runs the uncoarsened (coarsen=1) schedule; "
-                "coarsen_ff/coarsen_cr/coarsen_lanes are not supported")
-        devs = list(devices) if devices is not None else jax.devices()
-        if len(devs) > 1:
-            # §15 fallback: the shard_map body stays pure-JAX; a pallas
-            # request degrades to wall-clock only (colors are bit-identical)
-            resolve_backend(backend)
-            from repro.core.distributed import color_distributed
 
-            return color_distributed(
-                g, devices=devs, heuristic=heuristic, firstfit=firstfit,
-                buckets=buckets, tiling=tiling, tail_serial=tail_serial,
-                max_iters=max_iters,
+    def run(engine=engine, mode=mode, use_kernel=use_kernel):
+        if engine == "classic":
+            use_kernel = resolve_backend(backend, use_kernel) == "pallas"
+            return _color_classic(
+                g, heuristic, firstfit, use_kernel, coarsen_ff, coarsen_cr,
+                coarsen_lanes, buckets, mode, max_iters, reuse_rows,
+                trace_cap=resolve_trace_cap(trace, max_iters),
             )
-        # one device: the sharded schedule IS the ragged fused one — pin
-        # mode so colors AND accounting are device-count-independent
-        engine, mode = "ragged", "fused"
-    use_kernel = resolve_backend(backend, use_kernel) == "pallas"
-    if engine not in ("ragged", "padded"):
-        raise ValueError(
-            f"unknown engine {engine!r}; options: ragged, padded, classic, "
-            f"sharded"
+        if engine == "sharded":
+            # validate BEFORE the one-device fallback so the accepted option
+            # surface never depends on how many devices happen to be present
+            if use_kernel:
+                raise ValueError(
+                    "engine='sharded' does not support use_kernel=True")
+            if coarsen_ff != 1 or coarsen_cr != 1 or coarsen_lanes:
+                raise ValueError(
+                    "engine='sharded' runs the uncoarsened (coarsen=1) "
+                    "schedule; coarsen_ff/coarsen_cr/coarsen_lanes are not "
+                    "supported")
+            devs = list(devices) if devices is not None else jax.devices()
+            if len(devs) > 1:
+                # §15 fallback: the shard_map body stays pure-JAX; a pallas
+                # request degrades to wall-clock only (colors bit-identical)
+                resolve_backend(backend)
+                from repro.core.distributed import color_distributed
+
+                return color_distributed(
+                    g, devices=devs, heuristic=heuristic, firstfit=firstfit,
+                    buckets=buckets, tiling=tiling, tail_serial=tail_serial,
+                    max_iters=max_iters, trace=trace,
+                )
+            # one device: the sharded schedule IS the ragged fused one — pin
+            # mode so colors AND accounting are device-count-independent
+            engine, mode = "ragged", "fused"
+        use_kernel = resolve_backend(backend, use_kernel) == "pallas"
+        if engine not in ("ragged", "padded"):
+            raise ValueError(
+                f"unknown engine {engine!r}; options: ragged, padded, "
+                f"classic, sharded"
+            )
+
+        with span("partition_plan"):
+            classes, widths = _resolve_classes(g.degrees, buckets, tiling)
+        dmax = max(g.max_degree, 1)
+        with span("csr_build", engine=engine):
+            deg_ext = _graph_device_cache(g, "deg_ext", lambda: jnp.asarray(
+                np.concatenate(
+                    [g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
+            ))
+            if engine == "ragged":
+                provider = _graph_device_cache(
+                    g, "dcsr", lambda: DeviceCSR.from_csr(g))
+                tile_widths = widths
+                acc_widths = widths
+            else:
+                provider = _graph_device_cache(g, "dense", lambda: DenseRows(
+                    jnp.asarray(g.padded_adjacency())))
+                tile_widths = [None] * len(widths)
+                acc_widths = [dmax] * len(widths)
+        tail_enabled, thr = resolve_tail_threshold(tail_serial, n)
+        return run_ragged_engine(
+            n=n,
+            provider=provider,
+            deg_ext=deg_ext,
+            classes=classes,
+            tile_widths=tile_widths,
+            acc_widths=acc_widths,
+            tail_width=dmax,
+            mode=mode,
+            heuristic=heuristic,
+            kind=firstfit,
+            use_kernel=use_kernel,
+            coarsen=max(int(coarsen_ff), int(coarsen_cr)),
+            coarsen_lanes=coarsen_lanes,
+            tail_enabled=tail_enabled,
+            tail_threshold=thr,
+            max_iters=max_iters,
+            pack_degrees=dmax < 2**15 - 1,
+            trace=trace,
         )
 
-    classes, widths = _resolve_classes(g.degrees, buckets, tiling)
-    dmax = max(g.max_degree, 1)
-    deg_ext = _graph_device_cache(g, "deg_ext", lambda: jnp.asarray(
-        np.concatenate([g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
-    ))
-    if engine == "ragged":
-        provider = _graph_device_cache(g, "dcsr", lambda: DeviceCSR.from_csr(g))
-        tile_widths = widths
-        acc_widths = widths
-    else:
-        provider = _graph_device_cache(g, "dense", lambda: DenseRows(
-            jnp.asarray(g.padded_adjacency())))
-        tile_widths = [None] * len(widths)
-        acc_widths = [dmax] * len(widths)
-    tail_enabled, thr = resolve_tail_threshold(tail_serial, n)
-    return run_ragged_engine(
-        n=n,
-        provider=provider,
-        deg_ext=deg_ext,
-        classes=classes,
-        tile_widths=tile_widths,
-        acc_widths=acc_widths,
-        tail_width=dmax,
-        mode=mode,
-        heuristic=heuristic,
-        kind=firstfit,
-        use_kernel=use_kernel,
-        coarsen=max(int(coarsen_ff), int(coarsen_cr)),
-        coarsen_lanes=coarsen_lanes,
-        tail_enabled=tail_enabled,
-        tail_threshold=thr,
-        max_iters=max_iters,
-        pack_degrees=dmax < 2**15 - 1,
-    )
+    if not trace:
+        return run()
+    # trace=True opens its own span recorder so result.trace.spans carries
+    # the phase breakdown even without a user recorder; an outer recorder
+    # (repro.obs.recorder()) still observes every span — recorders nest
+    with SpanRecorder() as rec:
+        result = run()
+    if result.trace is not None:
+        result.trace.spans = rec.events
+    return result
 
 
 def _color_classic(
     g, heuristic, firstfit, use_kernel, coarsen_ff, coarsen_cr,
-    coarsen_lanes, buckets, mode, max_iters, reuse_rows,
+    coarsen_lanes, buckets, mode, max_iters, reuse_rows, trace_cap=0,
 ):
     """The pre-§12 two-phase engine (FirstFit kernel + ConflictResolve kernel)."""
     n = g.n
@@ -1002,7 +1137,7 @@ def _color_classic(
         assert not buckets, "classic fused mode runs single-class (full-width) only"
         return _run_fused(
             g, adjs[0], deg_ext, colors_ext, heuristic, firstfit, coarsen_ff,
-            coarsen_cr, use_kernel, max_iters, reuse_rows,
+            coarsen_cr, use_kernel, max_iters, reuse_rows, trace_cap,
         )
     if mode != "workefficient":
         raise ValueError(f"unknown mode {mode!r}")
@@ -1012,37 +1147,51 @@ def _color_classic(
     wls = [jnp.asarray(ids) for ids in classes]
     counts = [int(ids.shape[0]) for ids in classes]
     iters = work = padded = 0
-    while sum(counts) > 0 and iters < max_iters:
-        new_wls, new_counts = [], []
-        for k, (wl, count, adj_k) in enumerate(zip(wls, counts, adjs)):
-            if count == 0:
-                new_wls.append(wl[:1])
-                new_counts.append(0)
-                continue
-            cap = min(next_pow2(count), wl.shape[0])
-            if coarsen_lanes:
-                coarsen_ff = max(1, math.ceil(cap / coarsen_lanes))
-            colors_ext, wl_out, cnt = sgr_step(
-                adj_k,
-                deg_ext,
-                colors_ext,
-                wl[:cap],
-                heuristic=heuristic,
-                kind=firstfit,
-                coarsen_ff=coarsen_ff,
-                coarsen_cr=coarsen_cr,
-                use_kernel=use_kernel,
-                reuse_rows=reuse_rows,
-            )
-            work += count
-            padded += cap * widths[k]
-            new_wls.append(wl_out)
-            new_counts.append(int(cnt))
-        wls, counts = new_wls, new_counts
-        iters += 1
+    rows = []
+    with span("superstep_loop", mode=mode):
+        while sum(counts) > 0 and iters < max_iters:
+            live_in = sum(counts)
+            step_cells = 0
+            new_wls, new_counts = [], []
+            for k, (wl, count, adj_k) in enumerate(zip(wls, counts, adjs)):
+                if count == 0:
+                    new_wls.append(wl[:1])
+                    new_counts.append(0)
+                    continue
+                cap = min(next_pow2(count), wl.shape[0])
+                if coarsen_lanes:
+                    coarsen_ff = max(1, math.ceil(cap / coarsen_lanes))
+                colors_ext, wl_out, cnt = sgr_step(
+                    adj_k,
+                    deg_ext,
+                    colors_ext,
+                    wl[:cap],
+                    heuristic=heuristic,
+                    kind=firstfit,
+                    coarsen_ff=coarsen_ff,
+                    coarsen_cr=coarsen_cr,
+                    use_kernel=use_kernel,
+                    reuse_rows=reuse_rows,
+                )
+                work += count
+                padded += cap * widths[k]
+                step_cells += cap * widths[k]
+                new_wls.append(wl_out)
+                new_counts.append(int(cnt))
+            wls, counts = new_wls, new_counts
+            iters += 1
+            if trace_cap:
+                new_total = sum(counts)
+                rows.append((live_in, live_in - new_total, new_total,
+                             int(jnp.max(colors_ext)), step_cells, 0, 0, 0))
 
     colors = np.asarray(colors_ext[:n])
-    return ColoringResult(colors, iters, work, padded, converged=sum(counts) == 0)
+    result = ColoringResult(colors, iters, work, padded,
+                            converged=sum(counts) == 0)
+    if trace_cap:
+        result.trace = assemble_trace(rows, iters, trace_cap,
+                                      "classic:workefficient")
+    return result
 
 
 @register("fused")
@@ -1054,7 +1203,7 @@ def color_fused(g: CSRGraph, **opts) -> ColoringResult:
 
 def _run_fused(
     g, adj, deg_ext, colors_ext, heuristic, kind, coarsen_ff, coarsen_cr,
-    use_kernel, max_iters, reuse_rows=False,
+    use_kernel, max_iters, reuse_rows=False, trace_cap=0,
 ):
     n = g.n
     step = partial(
@@ -1069,7 +1218,16 @@ def _run_fused(
         reuse_rows=reuse_rows,
     )
     wl0 = jnp.arange(n, dtype=jnp.int32)
-    colors_ext, _, count, it, work = run_fused_loop(
-        step, colors_ext, wl0, n, max_iters
-    )
-    return fused_result(colors_ext, n, count, it, work, width=int(adj.shape[1]))
+    width = int(adj.shape[1])
+    with span("superstep_loop", mode="fused"):
+        out = run_fused_loop(
+            step, colors_ext, wl0, n, max_iters,
+            trace_cap=trace_cap, cells_per_step=n * width,
+        )
+    colors_ext, _, count, it, work = out[:5]
+    result = fused_result(colors_ext, n, count, it, work, width=width)
+    if trace_cap:
+        rows = ring_rows(np.asarray(out[5]), int(it))
+        result.trace = assemble_trace(rows, int(it), trace_cap,
+                                      "classic:fused")
+    return result

@@ -59,6 +59,8 @@ from repro.core.coloring import (
 )
 from repro.core.csr import CSRGraph, DeviceCSR, PartitionedCSR, next_pow2
 from repro.core.heuristics import HEURISTICS
+from repro.obs.spans import SpanRecorder, jit_span, span
+from repro.obs.trace import assemble_trace, empty_trace, resolve_trace_cap
 
 __all__ = ["ShardRows", "color_distributed", "run_sharded_engine"]
 
@@ -235,6 +237,7 @@ def run_sharded_engine(
     algorithm: str,
     pack_degrees: bool = False,
     include_first_hop: bool = True,
+    trace=False,
 ) -> ColoringResult:
     """Drive the sharded super-step to convergence (§13).
 
@@ -245,6 +248,14 @@ def run_sharded_engine(
     ``prov_np`` holds the stacked per-shard provider arrays
     (``plan.stack_shards`` output for ``"csr"``, ``(stacked first hop,
     replicated second hop)`` for ``"twohop"``).
+
+    With ``trace`` (§16) each super-step records a telemetry row including
+    the two sharded-only columns: ``halo_bytes`` (entries received per
+    device this step × entry bytes × ndev) and ``imbalance`` (max − min
+    per-shard live count).  ``max_color`` is read off the sharded view and
+    may transiently include a stale remote entry mid-run; the committed
+    final row is exact.  The host loop records on the host, so the
+    shard_map programs are untouched either way.
     """
     if heuristic not in HEURISTICS:
         raise ValueError(
@@ -309,53 +320,82 @@ def run_sharded_engine(
         tile_widths=tuple(tile_widths), heuristic=heuristic, kind=kind,
         pack_degrees=pack_degrees, pack_halo=pack_halo,
         include_first_hop=include_first_hop, max_width=tail_width)
-    while total > 0 and iters < max_iters:
-        if tail_enabled and total <= tail_threshold:
-            break
-        if tail_enabled and _stalled(iters, total, prev):
-            stalled = True
-            break
-        prev = total
-        cap_s = min(next_pow2(max(int(scounts.max(initial=0)), 1)),
-                    int(swl.shape[1]))
-        out = step(prov, start_dev, bmask_dev, deg_dev, view,
-                   swl[:, :cap_s], *wls)
-        view, swl, counts_dev, scounts_dev = out[:4]
-        wls = list(out[4:])
-        counts = np.asarray(counts_dev)
-        scounts = np.asarray(scounts_dev)
-        # received per device: ndev × cap_s halo entries (padded lanes too)
-        halo_bytes += halo_entry_bytes * ndev * cap_s
-        iters += 1
-        total = int(counts.sum())
-        work += total
-        padded += cells_per_step
+    trace_cap = resolve_trace_cap(trace, max_iters)
+    rows = []
+    if trace_cap:
+        # the materialized bootstrap: everyone takes color 1, nothing retires
+        rows.append((total, 0, total, 1, 0, 0, 0, 0))
+    with span("superstep_loop", mode="sharded", ndev=ndev):
+        while total > 0 and iters < max_iters:
+            if tail_enabled and total <= tail_threshold:
+                break
+            if tail_enabled and _stalled(iters, total, prev):
+                stalled = True
+                break
+            prev = total
+            cap_s = min(next_pow2(max(int(scounts.max(initial=0)), 1)),
+                        int(swl.shape[1]))
+            with jit_span("superstep", ("sharded_step", provider_kind, n, L,
+                                        ndev, tuple(tile_widths), heuristic,
+                                        kind, pack_degrees, pack_halo,
+                                        cap_s)):
+                out = step(prov, start_dev, bmask_dev, deg_dev, view,
+                           swl[:, :cap_s], *wls)
+            view, swl, counts_dev, scounts_dev = out[:4]
+            wls = list(out[4:])
+            counts = np.asarray(counts_dev)
+            scounts = np.asarray(scounts_dev)
+            # received per device: ndev × cap_s halo entries (padded lanes too)
+            step_halo = halo_entry_bytes * ndev * cap_s
+            halo_bytes += step_halo
+            iters += 1
+            new_total = int(counts.sum())
+            if trace_cap:
+                per_shard = counts.sum(axis=1)
+                rows.append((total, total - new_total, new_total,
+                             int(jnp.max(view)), cells_per_step, 0,
+                             step_halo,
+                             int(per_shard.max() - per_shard.min())))
+            total = new_total
+            work += total
+            padded += cells_per_step
 
     converged = total == 0
     deg_ext_loc = jnp.asarray(deg_ext_np)
+    tail_cells = 0
     if total > 0 and iters < max_iters and tail_enabled:
         # coordinated tail: gather survivors to one device, one ordered
         # serial FirstFit pass, scatter back by range assembly
-        colors_ext = jnp.asarray(_assemble(view, plan))
-        if stalled:
-            tail_wl = order_tail(jnp.arange(n, dtype=jnp.int32), deg_ext_loc)
-        else:
-            flat = np.concatenate(
-                [np.asarray(w).reshape(-1) for w in wls]).astype(np.int32)
-            tail_wl = order_tail(jnp.asarray(flat), deg_ext_loc)
-        colors_ext = provider_tail(tail_provider, colors_ext, tail_wl,
-                                   kind=kind)
+        with span("serial_tail", live=total, stalled=stalled):
+            colors_ext = jnp.asarray(_assemble(view, plan))
+            if stalled:
+                tail_wl = order_tail(jnp.arange(n, dtype=jnp.int32),
+                                     deg_ext_loc)
+            else:
+                flat = np.concatenate(
+                    [np.asarray(w).reshape(-1) for w in wls]).astype(np.int32)
+                tail_wl = order_tail(jnp.asarray(flat), deg_ext_loc)
+            colors_ext = provider_tail(tail_provider, colors_ext, tail_wl,
+                                       kind=kind)
         work += n if stalled else total
-        padded += int(tail_wl.shape[0]) * tail_width
+        tail_cells = int(tail_wl.shape[0]) * tail_width
+        padded += tail_cells
         iters += 1
         converged = True
         colors = np.asarray(colors_ext[:n])
+        if trace_cap:
+            rows.append((total, total, 0, int(colors.max(initial=0)),
+                         tail_cells, 1, 0, 0))
     else:
         colors = _assemble(view, plan)[:n]
-    return ColoringResult(
+    result = ColoringResult(
         colors, iters, work + n, padded, converged, algorithm=algorithm,
         halo_bytes_per_step=halo_bytes / max(iters, 1),
     )
+    if trace_cap:
+        result.trace = assemble_trace(rows, iters, trace_cap,
+                                      f"{algorithm}:sharded")
+    return result
 
 
 def _assemble(view, plan: PartitionedCSR) -> np.ndarray:
@@ -382,6 +422,7 @@ def color_distributed(
     tiling="auto",
     tail_serial="auto",
     max_iters: int | None = None,
+    trace=False,
 ) -> ColoringResult:
     """Color ``g`` on every available device with the sharded engine (§13).
 
@@ -399,26 +440,42 @@ def color_distributed(
     ndev = len(devices)
     n = g.n
     if n == 0:
-        return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
-                              algorithm=f"sharded_sgr_{ndev}dev")
+        result = ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
+                                algorithm=f"sharded_sgr_{ndev}dev")
+        if trace:
+            result.trace = empty_trace(f"sharded_sgr_{ndev}dev")
+        return result
     max_iters = max_iters or n + 1
-    plan = _graph_device_cache(
-        g, f"plan{ndev}", lambda: PartitionedCSR.from_graph(g, ndev))
-    prov_np = _graph_device_cache(
-        g, f"shards{ndev}", lambda: plan.stack_shards(g))
-    classes, widths = _resolve_classes(g.degrees, buckets, tiling)
-    dmax = max(g.max_degree, 1)
-    deg_ext_np = np.concatenate(
-        [g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
-    tail_provider = _graph_device_cache(
-        g, "dcsr", lambda: DeviceCSR.from_csr(g))
-    tail_enabled, thr = resolve_tail_threshold(tail_serial, n)
-    return run_sharded_engine(
-        plan=plan, devices=devices, provider_kind="csr", prov_np=prov_np,
-        deg_ext_np=deg_ext_np, classes=classes, tile_widths=widths,
-        acc_widths=widths, tail_width=dmax, tail_provider=tail_provider,
-        heuristic=heuristic, kind=firstfit, tail_enabled=tail_enabled,
-        tail_threshold=thr, max_iters=max_iters,
-        algorithm=f"sharded_sgr_{ndev}dev",
-        pack_degrees=dmax < 2**15 - 1,
-    )
+
+    def run():
+        with span("partition_plan", ndev=ndev):
+            plan = _graph_device_cache(
+                g, f"plan{ndev}", lambda: PartitionedCSR.from_graph(g, ndev))
+            classes, widths = _resolve_classes(g.degrees, buckets, tiling)
+        with span("csr_build", engine="sharded"):
+            prov_np = _graph_device_cache(
+                g, f"shards{ndev}", lambda: plan.stack_shards(g))
+            tail_provider = _graph_device_cache(
+                g, "dcsr", lambda: DeviceCSR.from_csr(g))
+        dmax = max(g.max_degree, 1)
+        deg_ext_np = np.concatenate(
+            [g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
+        tail_enabled, thr = resolve_tail_threshold(tail_serial, n)
+        return run_sharded_engine(
+            plan=plan, devices=devices, provider_kind="csr", prov_np=prov_np,
+            deg_ext_np=deg_ext_np, classes=classes, tile_widths=widths,
+            acc_widths=widths, tail_width=dmax, tail_provider=tail_provider,
+            heuristic=heuristic, kind=firstfit, tail_enabled=tail_enabled,
+            tail_threshold=thr, max_iters=max_iters,
+            algorithm=f"sharded_sgr_{ndev}dev",
+            pack_degrees=dmax < 2**15 - 1,
+            trace=trace,
+        )
+
+    if not trace:
+        return run()
+    with SpanRecorder() as rec:
+        result = run()
+    if result.trace is not None:
+        result.trace.spans = rec.events
+    return result

@@ -4,17 +4,19 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.csr import CSRGraph
+from repro.obs.spans import span
 
 __all__ = ["is_valid_coloring", "num_colors", "quality_report"]
 
 
 def is_valid_coloring(g: CSRGraph, colors: np.ndarray) -> bool:
     """True iff every vertex is colored (>0) and no edge is monochromatic."""
-    colors = np.asarray(colors)
-    if colors.shape[0] < g.n or (colors[: g.n] <= 0).any():
-        return False
-    src, dst = g.edges()
-    return not bool((colors[src] == colors[dst]).any())
+    with span("validate", n=g.n):
+        colors = np.asarray(colors)
+        if colors.shape[0] < g.n or (colors[: g.n] <= 0).any():
+            return False
+        src, dst = g.edges()
+        return not bool((colors[src] == colors[dst]).any())
 
 
 def num_colors(colors: np.ndarray) -> int:

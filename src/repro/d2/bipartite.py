@@ -172,6 +172,7 @@ def color_bipartite(
     tail_serial="auto",
     engine: str = "ragged",
     devices=None,
+    trace=False,
 ) -> ColoringResult:
     """Partial coloring of ``bg``'s column side with the SGR super-step.
 
@@ -203,6 +204,7 @@ def color_bipartite(
                 bg, devs, heuristic=heuristic, firstfit=firstfit,
                 strategy=strategy, memory_budget=memory_budget,
                 tiling=tiling, tail_serial=tail_serial, max_iters=max_iters,
+                trace=trace,
             )
         # one device: fall back to the ragged fused realization — pin mode
         # so colors AND accounting are device-count-independent
@@ -211,75 +213,112 @@ def color_bipartite(
         raise ValueError(
             f"unknown engine {engine!r}; options: ragged, sharded")
     if nc == 0:
-        return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
-                              algorithm="bipartite_partial_sgr")
+        result = ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
+                                algorithm="bipartite_partial_sgr")
+        if trace:
+            from repro.obs.trace import empty_trace
+
+            result.trace = empty_trace("bipartite_partial_sgr")
+        return result
     max_iters = max_iters or nc + 1
-    deg_ext = jnp.asarray(
-        np.concatenate([bg.col_degrees, np.zeros(1, np.int32)]).astype(np.int32)
-    )
     strategy = _resolve_bipartite_strategy(bg, strategy, memory_budget)
 
-    if strategy == "precomputed":
-        cg = bg.column_conflict_graph()
-        provider = DeviceCSR.from_csr(cg)
-        degrees_for_tiling = cg.degrees
-    else:
-        cols2rows, rows2cols = bg.padded_halves()
-        provider = TwoHopRows(jnp.asarray(cols2rows), jnp.asarray(rows2cols),
-                              include_first_hop=False)
-        degrees_for_tiling = None
-    return run_d2_engine(
-        n=nc, provider=provider, deg_ext=deg_ext, tiling=tiling,
-        degrees_for_tiling=degrees_for_tiling, mode=mode, heuristic=heuristic,
-        kind=firstfit, use_kernel=use_kernel, coarsen=coarsen,
-        tail_serial=tail_serial, max_iters=max_iters,
-        algorithm="bipartite_partial_sgr",
-        deg_bound=int(bg.col_degrees.max(initial=0)),
-    )
+    def run():
+        from repro.obs.spans import span
+
+        deg_ext = jnp.asarray(np.concatenate(
+            [bg.col_degrees, np.zeros(1, np.int32)]).astype(np.int32))
+        if strategy == "precomputed":
+            with span("csr_build", engine="bipartite_precomputed"):
+                cg = bg.column_conflict_graph()
+                provider = DeviceCSR.from_csr(cg)
+            degrees_for_tiling = cg.degrees
+        else:
+            with span("csr_build", engine="bipartite_onthefly"):
+                cols2rows, rows2cols = bg.padded_halves()
+                provider = TwoHopRows(jnp.asarray(cols2rows),
+                                      jnp.asarray(rows2cols),
+                                      include_first_hop=False)
+            degrees_for_tiling = None
+        return run_d2_engine(
+            n=nc, provider=provider, deg_ext=deg_ext, tiling=tiling,
+            degrees_for_tiling=degrees_for_tiling, mode=mode,
+            heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
+            coarsen=coarsen, tail_serial=tail_serial, max_iters=max_iters,
+            algorithm="bipartite_partial_sgr",
+            deg_bound=int(bg.col_degrees.max(initial=0)), trace=trace,
+        )
+
+    if not trace:
+        return run()
+    from repro.obs.spans import SpanRecorder
+
+    with SpanRecorder() as rec:
+        result = run()
+    if result.trace is not None:
+        result.trace.spans = rec.events
+    return result
 
 
 def _color_bipartite_sharded(
     bg: BipartiteGraph, devices, *, heuristic, firstfit, strategy,
-    memory_budget, tiling, tail_serial, max_iters,
+    memory_budget, tiling, tail_serial, max_iters, trace=False,
 ) -> ColoringResult:
     """The §13 multi-device realization of ``color_bipartite``."""
+    from repro.obs.spans import SpanRecorder, span
+
     nc = bg.n_cols
     ndev = len(devices)
     max_iters = max_iters or nc + 1
-    deg_ext_np = np.concatenate(
-        [bg.col_degrees, np.zeros(1, np.int32)]).astype(np.int32)
     strategy = _resolve_bipartite_strategy(bg, strategy, memory_budget)
 
-    if strategy == "precomputed":
-        cg = bg.column_conflict_graph()
-        plan = PartitionedCSR.from_graph(cg, ndev)
+    def run():
+        deg_ext_np = np.concatenate(
+            [bg.col_degrees, np.zeros(1, np.int32)]).astype(np.int32)
+        if strategy == "precomputed":
+            with span("csr_build", engine="bipartite_precomputed"):
+                cg = bg.column_conflict_graph()
+            with span("partition_plan", ndev=ndev):
+                plan = PartitionedCSR.from_graph(cg, ndev)
+                prov_np = plan.stack_shards(cg)
+            return run_sharded_d2_engine(
+                n=nc, devices=devices, plan=plan, provider_kind="csr",
+                prov_np=prov_np, deg_ext_np=deg_ext_np,
+                degrees_for_tiling=cg.degrees, tiling=tiling,
+                heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
+                max_iters=max_iters,
+                algorithm=f"bipartite_partial_sgr_sharded_{ndev}dev",
+                tail_provider=DeviceCSR.from_csr(cg),
+                deg_bound=int(bg.col_degrees.max(initial=0)), trace=trace,
+            )
+        with span("csr_build", engine="bipartite_onthefly"):
+            cols2rows, rows2cols = bg.padded_halves()
+        with span("partition_plan", ndev=ndev):
+            plan = PartitionedCSR.from_bipartite(bg, ndev)
+            rows_np = plan.stack_rows(cols2rows, fill=bg.n_rows)
+        full_width = cols2rows.shape[1] * rows2cols.shape[1]
         return run_sharded_d2_engine(
-            n=nc, devices=devices, plan=plan, provider_kind="csr",
-            prov_np=plan.stack_shards(cg), deg_ext_np=deg_ext_np,
-            degrees_for_tiling=cg.degrees, tiling=tiling,
+            n=nc, devices=devices, plan=plan, provider_kind="twohop",
+            prov_np=(rows_np, rows2cols),
+            deg_ext_np=deg_ext_np, degrees_for_tiling=None, tiling=tiling,
             heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
             max_iters=max_iters,
             algorithm=f"bipartite_partial_sgr_sharded_{ndev}dev",
-            tail_provider=DeviceCSR.from_csr(cg),
+            tail_provider=TwoHopRows(jnp.asarray(cols2rows),
+                                     jnp.asarray(rows2cols),
+                                     include_first_hop=False),
+            include_first_hop=False,
             deg_bound=int(bg.col_degrees.max(initial=0)),
+            full_width=full_width, trace=trace,
         )
-    plan = PartitionedCSR.from_bipartite(bg, ndev)
-    cols2rows, rows2cols = bg.padded_halves()
-    full_width = cols2rows.shape[1] * rows2cols.shape[1]
-    return run_sharded_d2_engine(
-        n=nc, devices=devices, plan=plan, provider_kind="twohop",
-        prov_np=(plan.stack_rows(cols2rows, fill=bg.n_rows), rows2cols),
-        deg_ext_np=deg_ext_np, degrees_for_tiling=None, tiling=tiling,
-        heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
-        max_iters=max_iters,
-        algorithm=f"bipartite_partial_sgr_sharded_{ndev}dev",
-        tail_provider=TwoHopRows(jnp.asarray(cols2rows),
-                                 jnp.asarray(rows2cols),
-                                 include_first_hop=False),
-        include_first_hop=False,
-        deg_bound=int(bg.col_degrees.max(initial=0)),
-        full_width=full_width,
-    )
+
+    if not trace:
+        return run()
+    with SpanRecorder() as rec:
+        result = run()
+    if result.trace is not None:
+        result.trace.spans = rec.events
+    return result
 
 
 # --------------------------------------------------------------------------

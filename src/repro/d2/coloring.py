@@ -48,6 +48,8 @@ from repro.core.coloring import (
     run_ragged_engine,
 )
 from repro.core.csr import CSRGraph, DeviceCSR, PartitionedCSR
+from repro.obs.spans import SpanRecorder, span
+from repro.obs.trace import empty_trace
 
 __all__ = ["color_distance2", "d2_sgr_step", "TwoHopRows", "DEFAULT_D2_BUDGET"]
 
@@ -200,7 +202,7 @@ def d2_sgr_step(
 def run_d2_engine(
     *, n, provider, deg_ext, tiling, degrees_for_tiling, mode, heuristic,
     kind, use_kernel, coarsen, tail_serial, max_iters, algorithm,
-    deg_bound: int = 2**15,
+    deg_bound: int = 2**15, trace=False,
 ) -> ColoringResult:
     """Drive the rotated engine over a D2 row provider (shared w/ bipartite).
 
@@ -233,6 +235,7 @@ def run_d2_engine(
         # colors <= tail_width + 1; the loser rule's degrees are bounded by
         # deg_bound (the caller's original/column degrees)
         pack_degrees=max(tail_width, deg_bound) < 2**15 - 1,
+        trace=trace,
     )
 
 
@@ -261,7 +264,7 @@ def run_sharded_d2_engine(
     *, n, devices, plan, provider_kind, prov_np, deg_ext_np,
     degrees_for_tiling, tiling, heuristic, kind, tail_serial, max_iters,
     algorithm, tail_provider, include_first_hop=True, deg_bound: int = 2**15,
-    full_width: int | None = None,
+    full_width: int | None = None, trace=False,
 ) -> ColoringResult:
     """Drive the §13 sharded engine over a D2 partition plan.
 
@@ -294,7 +297,7 @@ def run_sharded_d2_engine(
         heuristic=heuristic, kind=kind, tail_enabled=tail_enabled,
         tail_threshold=thr, max_iters=max_iters, algorithm=algorithm,
         pack_degrees=max(tail_width, deg_bound) < 2**15 - 1,
-        include_first_hop=include_first_hop,
+        include_first_hop=include_first_hop, trace=trace,
     )
 
 
@@ -315,6 +318,7 @@ def color_distance2(
     engine: str = "ragged",
     devices=None,
     backend: str | None = None,
+    trace=False,
 ) -> ColoringResult:
     """Distance-2 coloring of ``g`` with the rotated SGR super-step (§12).
 
@@ -361,6 +365,7 @@ def color_distance2(
                 g, devs, heuristic=heuristic, firstfit=firstfit,
                 strategy=strategy, memory_budget=memory_budget,
                 tiling=tiling, tail_serial=tail_serial, max_iters=max_iters,
+                trace=trace,
             )
         # one device: fall back to the ragged fused realization — pin mode
         # so colors AND accounting are device-count-independent
@@ -370,68 +375,98 @@ def color_distance2(
             f"unknown engine {engine!r}; options: ragged, sharded")
     use_kernel = resolve_backend(backend, use_kernel) == "pallas"
     if n == 0:
-        return ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
-                              algorithm="distance2_sgr")
+        result = ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
+                                algorithm="distance2_sgr")
+        if trace:
+            result.trace = empty_trace("distance2_sgr")
+        return result
     max_iters = max_iters or n + 1
-    deg_ext = jnp.asarray(
-        np.concatenate([g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
-    )
-    strategy = resolve_d2_strategy(g, strategy, memory_budget)
 
-    if strategy == "precomputed":
-        g2 = g.square()
-        provider = DeviceCSR.from_csr(g2)
-        degrees_for_tiling = g2.degrees
-    else:
-        adj = jnp.asarray(g.padded_adjacency())
-        provider = TwoHopRows(adj, adj, include_first_hop=True)
-        degrees_for_tiling = None
-    return run_d2_engine(
-        n=n, provider=provider, deg_ext=deg_ext, tiling=tiling,
-        degrees_for_tiling=degrees_for_tiling, mode=mode, heuristic=heuristic,
-        kind=firstfit, use_kernel=use_kernel, coarsen=coarsen,
-        tail_serial=tail_serial, max_iters=max_iters,
-        algorithm="distance2_sgr", deg_bound=g.max_degree,
-    )
+    def run():
+        deg_ext = jnp.asarray(np.concatenate(
+            [g.degrees, np.zeros(1, np.int32)]).astype(np.int32))
+        strat = resolve_d2_strategy(g, strategy, memory_budget)
+        if strat == "precomputed":
+            with span("csr_build", engine="d2_precomputed"):
+                g2 = g.square()
+                provider = DeviceCSR.from_csr(g2)
+            degrees_for_tiling = g2.degrees
+        else:
+            with span("csr_build", engine="d2_onthefly"):
+                adj = jnp.asarray(g.padded_adjacency())
+                provider = TwoHopRows(adj, adj, include_first_hop=True)
+            degrees_for_tiling = None
+        return run_d2_engine(
+            n=n, provider=provider, deg_ext=deg_ext, tiling=tiling,
+            degrees_for_tiling=degrees_for_tiling, mode=mode,
+            heuristic=heuristic, kind=firstfit, use_kernel=use_kernel,
+            coarsen=coarsen, tail_serial=tail_serial, max_iters=max_iters,
+            algorithm="distance2_sgr", deg_bound=g.max_degree, trace=trace,
+        )
+
+    if not trace:
+        return run()
+    with SpanRecorder() as rec:
+        result = run()
+    if result.trace is not None:
+        result.trace.spans = rec.events
+    return result
 
 
 def _color_distance2_sharded(
     g: CSRGraph, devices, *, heuristic, firstfit, strategy, memory_budget,
-    tiling, tail_serial, max_iters,
+    tiling, tail_serial, max_iters, trace=False,
 ) -> ColoringResult:
     """The §13 multi-device realization of ``color_distance2``."""
     n = g.n
     ndev = len(devices)
     max_iters = max_iters or n + 1
-    deg_ext_np = np.concatenate(
-        [g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
     strategy = resolve_d2_strategy(g, strategy, memory_budget)
 
-    if strategy == "precomputed":
-        # G² reduces distance-2 to distance-1 (§11), so the plan partitions
-        # G² directly: its 1-hop boundary IS the two-hop reader set of g
-        g2 = g.square()
-        plan = PartitionedCSR.from_graph(g2, ndev)
+    def run():
+        deg_ext_np = np.concatenate(
+            [g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
+        if strategy == "precomputed":
+            # G² reduces distance-2 to distance-1 (§11), so the plan
+            # partitions G² directly: its 1-hop boundary IS the two-hop
+            # reader set of g
+            with span("csr_build", engine="d2_precomputed"):
+                g2 = g.square()
+            with span("partition_plan", ndev=ndev):
+                plan = PartitionedCSR.from_graph(g2, ndev)
+                prov_np = plan.stack_shards(g2)
+            return run_sharded_d2_engine(
+                n=n, devices=devices, plan=plan, provider_kind="csr",
+                prov_np=prov_np, deg_ext_np=deg_ext_np,
+                degrees_for_tiling=g2.degrees, tiling=tiling,
+                heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
+                max_iters=max_iters,
+                algorithm=f"distance2_sgr_sharded_{ndev}dev",
+                tail_provider=DeviceCSR.from_csr(g2), deg_bound=g.max_degree,
+                trace=trace,
+            )
+        with span("csr_build", engine="d2_onthefly"):
+            adj_np = g.padded_adjacency()
+            adj = jnp.asarray(adj_np)
+        with span("partition_plan", ndev=ndev):
+            plan = PartitionedCSR.from_graph(g, ndev, boundary_mode="two_hop")
+            rows_np = plan.stack_rows(adj_np, fill=n)
+        full_width = adj_np.shape[1] * adj_np.shape[1] + adj_np.shape[1]
         return run_sharded_d2_engine(
-            n=n, devices=devices, plan=plan, provider_kind="csr",
-            prov_np=plan.stack_shards(g2), deg_ext_np=deg_ext_np,
-            degrees_for_tiling=g2.degrees, tiling=tiling,
+            n=n, devices=devices, plan=plan, provider_kind="twohop",
+            prov_np=(rows_np, adj_np),
+            deg_ext_np=deg_ext_np, degrees_for_tiling=None, tiling=tiling,
             heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
-            max_iters=max_iters,
-            algorithm=f"distance2_sgr_sharded_{ndev}dev",
-            tail_provider=DeviceCSR.from_csr(g2), deg_bound=g.max_degree,
+            max_iters=max_iters, algorithm=f"distance2_sgr_sharded_{ndev}dev",
+            tail_provider=TwoHopRows(adj, adj, include_first_hop=True),
+            include_first_hop=True, deg_bound=g.max_degree,
+            full_width=full_width, trace=trace,
         )
-    plan = PartitionedCSR.from_graph(g, ndev, boundary_mode="two_hop")
-    adj_np = g.padded_adjacency()
-    adj = jnp.asarray(adj_np)
-    full_width = adj_np.shape[1] * adj_np.shape[1] + adj_np.shape[1]
-    return run_sharded_d2_engine(
-        n=n, devices=devices, plan=plan, provider_kind="twohop",
-        prov_np=(plan.stack_rows(adj_np, fill=n), adj_np),
-        deg_ext_np=deg_ext_np, degrees_for_tiling=None, tiling=tiling,
-        heuristic=heuristic, kind=firstfit, tail_serial=tail_serial,
-        max_iters=max_iters, algorithm=f"distance2_sgr_sharded_{ndev}dev",
-        tail_provider=TwoHopRows(adj, adj, include_first_hop=True),
-        include_first_hop=True, deg_bound=g.max_degree,
-        full_width=full_width,
-    )
+
+    if not trace:
+        return run()
+    with SpanRecorder() as rec:
+        result = run()
+    if result.trace is not None:
+        result.trace.spans = rec.events
+    return result

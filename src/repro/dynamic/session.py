@@ -46,6 +46,8 @@ from repro.core.coloring import (
     run_ragged_engine,
 )
 from repro.core.csr import CSRGraph, DeviceCSR, csr_from_edges, next_pow2
+from repro.obs.spans import SpanRecorder, span
+from repro.obs.trace import empty_trace
 
 __all__ = ["ColoringSession", "color_dynamic", "open_session"]
 
@@ -106,7 +108,7 @@ class ColoringSession:
                  firstfit: str = "bitset", mode: str = "fused",
                  tiling="auto", tail_serial="auto",
                  max_iters: int | None = None, compact_frac: float = 0.25,
-                 backend: str | None = None):
+                 backend: str | None = None, trace=False):
         from repro.dynamic.delta import DeltaCSR
         from repro.kernels.dispatch import resolve_backend
 
@@ -122,7 +124,21 @@ class ColoringSession:
         # pow2-padded worklists below already keep its jit cache keys stable
         self._backend = backend
         self._use_kernel = resolve_backend(backend) == "pallas"
+        # §16: trace knob threads to the cold and every frontier recolor
+        self._trace = trace
         self._dirty: list[np.ndarray] = []
+        # cumulative session counters behind .metrics(); engine cache
+        # hits/misses track the (shape, static-args) keys THIS session has
+        # presented to the jitted frontier engine — a repeat key is a jit
+        # cache hit by construction (the pow2 padding exists to make churn
+        # rounds repeat keys; PR 5's steady-state wall win depends on it)
+        self._counters = {
+            "deltas": 0, "dirtied_total": 0, "recolors": 0,
+            "full_recolors": 0, "noop_recolors": 0, "frontier_total": 0,
+            "work_total": 0, "supersteps_total": 0,
+            "engine_cache_hits": 0, "engine_cache_misses": 0,
+        }
+        self._engine_keys: set = set()
         self.result = self._cold(self.delta.graph())
         self.colors = self.result.colors
 
@@ -132,7 +148,7 @@ class ColoringSession:
             g, engine="ragged", mode=self._mode, heuristic=self._heuristic,
             firstfit=self._firstfit, tiling=self._tiling,
             tail_serial=self._tail_serial, max_iters=self._max_iters,
-            backend=self._backend,
+            backend=self._backend, trace=self._trace,
         )
 
     # -- state views ---------------------------------------------------------
@@ -172,22 +188,25 @@ class ColoringSession:
         ``(src, dst)`` array pairs; no-op entries (inserting an existing
         edge, deleting a missing one) dirty nothing.
         """
-        touched: list[np.ndarray] = []
-        if add_vertices:
-            touched.append(self.delta.add_vertices(add_vertices))
-        if add_edges is not None:
-            touched.append(self.delta.add_edges(*add_edges))
-        if remove_edges is not None:
-            touched.append(self.delta.remove_edges(*remove_edges))
-        if remove_vertices is not None:
-            touched.append(self.delta.remove_vertices(remove_vertices))
-        if not touched:
-            return np.zeros(0, np.int32)
-        out = np.unique(np.concatenate(
-            [np.asarray(t, dtype=np.int64) for t in touched]))
-        if out.size:
-            self._dirty.append(out)
-        return out.astype(np.int32)
+        with span("delta_mutation"):
+            touched: list[np.ndarray] = []
+            if add_vertices:
+                touched.append(self.delta.add_vertices(add_vertices))
+            if add_edges is not None:
+                touched.append(self.delta.add_edges(*add_edges))
+            if remove_edges is not None:
+                touched.append(self.delta.remove_edges(*remove_edges))
+            if remove_vertices is not None:
+                touched.append(self.delta.remove_vertices(remove_vertices))
+            self._counters["deltas"] += 1
+            if not touched:
+                return np.zeros(0, np.int32)
+            out = np.unique(np.concatenate(
+                [np.asarray(t, dtype=np.int64) for t in touched]))
+            if out.size:
+                self._dirty.append(out)
+            self._counters["dirtied_total"] += int(out.size)
+            return out.astype(np.int32)
 
     # -- recoloring ----------------------------------------------------------
     def recolor(self, *, full: bool = False) -> ColoringResult:
@@ -199,18 +218,35 @@ class ColoringSession:
         result a fresh ``color(g, "fused")`` would produce.
         """
         if full:
-            result = self._cold(self.delta.compact())
+            with span("compaction", overlay=self.delta.overlay_size):
+                g = self.delta.compact()
+            self._counters["full_recolors"] += 1
+            result = self._cold(g)
         else:
             frontier = self.frontier()
             if frontier.size == 0:
-                return ColoringResult(
+                self._counters["noop_recolors"] += 1
+                result = ColoringResult(
                     self.colors.copy(), 0, 0, 0, True, "dynamic_sgr")
-            result = self._recolor_frontier(frontier)
+                if self._trace:
+                    result.trace = empty_trace("dynamic_sgr")
+                return result
+            self._counters["frontier_total"] += int(frontier.size)
+            if self._trace:
+                with SpanRecorder() as rec:
+                    result = self._recolor_frontier(frontier)
+                if result.trace is not None:
+                    result.trace.spans = rec.events
+            else:
+                result = self._recolor_frontier(frontier)
         if not result.converged:
             raise RuntimeError(
                 "recolor() hit max_iters before converging; the session "
                 "coloring was NOT updated — retry with a larger max_iters, "
                 "tail_serial enabled, or recolor(full=True)")
+        self._counters["recolors"] += 1
+        self._counters["work_total"] += int(result.work_items)
+        self._counters["supersteps_total"] += int(result.iterations)
         self.colors = result.colors
         self.result = result
         self._dirty.clear()
@@ -250,6 +286,16 @@ class ColoringSession:
         # pack_degrees needs colors < 2^15 — frozen colors included (they can
         # exceed the CURRENT dmax + 1 bound after deletions shrink the graph)
         pack = dmax < 2**15 - 1 and int(colors0.max(initial=0)) < 2**15 - 1
+        # engine cache accounting: everything below that feeds a jit static
+        # arg or an array shape.  A key this session has already presented
+        # re-enters the jit cache; a fresh one forces a trace+compile.
+        key = (n, next_pow2(g.m + wcap), wcap,
+               tuple(c.shape[0] for c in classes), tuple(widths),
+               tail_enabled, thr, pack, self._max_iters or n + 1)
+        hit = key in self._engine_keys
+        self._engine_keys.add(key)
+        self._counters["engine_cache_hits" if hit else
+                       "engine_cache_misses"] += 1
         return run_ragged_engine(
             n=n, provider=provider, deg_ext=deg_ext, classes=classes,
             tile_widths=widths, acc_widths=widths, tail_width=dmax,
@@ -259,7 +305,29 @@ class ColoringSession:
             max_iters=self._max_iters or n + 1, algorithm="dynamic_sgr",
             pack_degrees=pack, colors_init=jnp.asarray(colors0),
             stall_serializes_all=False, class_counts=counts,
+            trace=self._trace,
         )
+
+    # -- observability -------------------------------------------------------
+    def metrics(self) -> dict:
+        """Cumulative session counters (DESIGN.md §16).
+
+        Lifetime totals since the cold coloring: mutation batches applied
+        (``deltas``) and vertices they dirtied, committed/no-op/full
+        recolors, summed frontier sizes, engine work items and super-steps,
+        plus the engine-shape cache behaviour — ``engine_cache_hits`` counts
+        frontier recolors whose (shape, static-arg) key repeated an earlier
+        one (a jit cache hit; the pow2 padding in ``_recolor_frontier``
+        exists to make steady-state churn land here) versus fresh keys that
+        forced a trace+compile.  Overlay state comes from the live DeltaCSR.
+        """
+        out = dict(self._counters)
+        out["overlay_size"] = int(self.delta.overlay_size)
+        out["compactions"] = int(self.delta.compactions)
+        out["n"] = int(self.n)
+        out["num_colors"] = self.num_colors
+        out["pending_frontier"] = int(self.frontier().size)
+        return out
 
 
 @register("dynamic")

@@ -1,0 +1,53 @@
+"""Observability layer: trace rings, phase spans, exporters (DESIGN.md §16).
+
+Three pieces, layered:
+
+* ``obs.trace``  — on-device trace rings + the ``RunTrace`` record every
+  engine attaches as ``ColoringResult.trace`` when called with
+  ``trace=True`` (a STATIC knob: ``trace=False`` compiles the identical
+  XLA program and stays bit-identical/zero-cost).
+* ``obs.spans``  — host-side monotonic-clock phase spans with
+  compile-vs-execute attribution per jit cache key.
+* ``obs.export`` / ``obs.report`` — Chrome-trace (Perfetto-loadable)
+  JSON export and the shared text reporter
+  (``python -m repro.obs.report``).
+"""
+from .export import chrome_trace, export_chrome_trace
+from .report import format_metrics, format_result, format_spans, format_trace
+from .spans import SpanEvent, SpanRecorder, jit_span, recorder, span
+from .trace import (
+    DEFAULT_TRACE_CAP,
+    NF,
+    TRACE_FIELDS,
+    HostRing,
+    RunTrace,
+    assemble_trace,
+    empty_trace,
+    resolve_trace_cap,
+    ring_init,
+    ring_rows,
+)
+
+__all__ = [
+    "TRACE_FIELDS",
+    "NF",
+    "DEFAULT_TRACE_CAP",
+    "HostRing",
+    "RunTrace",
+    "assemble_trace",
+    "empty_trace",
+    "resolve_trace_cap",
+    "ring_init",
+    "ring_rows",
+    "SpanEvent",
+    "SpanRecorder",
+    "recorder",
+    "span",
+    "jit_span",
+    "chrome_trace",
+    "export_chrome_trace",
+    "format_result",
+    "format_trace",
+    "format_spans",
+    "format_metrics",
+]

@@ -1,0 +1,151 @@
+"""Host-side phase spans with compile-vs-execute attribution (DESIGN.md §16).
+
+The engines wrap their host-visible phases — CSR build, partition
+planning, the super-step loop, the serial tail, delta mutation /
+compaction, validation — in ``span("name")`` context managers.  A span is
+a *no-op* unless a recorder is active: the engines pay one truthiness
+check per phase, nothing else, so uninstrumented callers are unaffected.
+
+To collect, open a recorder around any engine call::
+
+    from repro.obs import recorder
+    with recorder() as spans:
+        result = color(g, algorithm="fused")
+    # spans.events -> [SpanEvent(name="csr_build", ...), ...]
+
+Engines that run with ``trace=True`` open their own recorder internally
+and attach the captured events to ``ColoringResult.trace.spans``; an
+outer user recorder still sees every span (recorders nest — each event is
+delivered to the whole active stack).
+
+Compile-vs-execute attribution: jitted dispatches are wrapped in
+``jit_span(name, key)`` where ``key`` is the engine's jit cache key (the
+static-argument + shape tuple that decides retracing).  The first time a
+key is seen in the process the span is tagged ``cat="compile"`` —
+matching XLA's behavior of tracing+compiling on first call — and
+``cat="execute"`` afterwards.  That is how ``repro.obs.report`` splits a
+session's wall time into compile and steady-state execute, the
+distinction PR 5's churn work hinged on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from contextlib import contextmanager
+
+__all__ = [
+    "SpanEvent",
+    "SpanRecorder",
+    "recorder",
+    "span",
+    "jit_span",
+    "recording",
+    "jit_key_seen",
+]
+
+# stack of active recorders; module-level list so `span` can bail with a
+# single truthiness test when nobody is listening
+_ACTIVE: list = []
+
+# process-global registry of jit cache keys already dispatched once; mirrors
+# the lifetime of jax's own compilation cache (per-process)
+_SEEN_JIT_KEYS: set = set()
+
+
+@dataclasses.dataclass
+class SpanEvent:
+    """One closed phase span (monotonic clock, seconds)."""
+
+    name: str
+    start: float
+    duration: float
+    cat: str = "phase"      # "phase" | "compile" | "execute"
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "start": self.start,
+                "duration": self.duration, "cat": self.cat,
+                "meta": dict(self.meta)}
+
+
+class SpanRecorder:
+    """Accumulates every ``SpanEvent`` closed while it is on the stack."""
+
+    def __init__(self):
+        self.events: list = []
+
+    def __enter__(self):
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVE.remove(self)
+        return False
+
+    def total(self, name: str | None = None, cat: str | None = None) -> float:
+        """Summed duration of matching spans (seconds)."""
+        return sum(e.duration for e in self.events
+                   if (name is None or e.name == name)
+                   and (cat is None or e.cat == cat))
+
+    def by_name(self) -> dict:
+        out: dict = {}
+        for e in self.events:
+            agg = out.setdefault(e.name, {"count": 0, "seconds": 0.0,
+                                          "compile_seconds": 0.0})
+            agg["count"] += 1
+            agg["seconds"] += e.duration
+            if e.cat == "compile":
+                agg["compile_seconds"] += e.duration
+        return out
+
+
+def recorder() -> SpanRecorder:
+    """A fresh recorder; use as ``with recorder() as r: ...``."""
+    return SpanRecorder()
+
+
+def recording() -> bool:
+    """True when at least one recorder is active (spans are being kept)."""
+    return bool(_ACTIVE)
+
+
+@contextmanager
+def span(name: str, cat: str = "phase", **meta):
+    """Time a phase; no-op (one list truthiness check) without a recorder."""
+    if not _ACTIVE:
+        yield
+        return
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        ev = SpanEvent(name, t0, time.perf_counter() - t0, cat, meta)
+        for rec in _ACTIVE:
+            rec.events.append(ev)
+
+
+def jit_key_seen(key) -> bool:
+    """Register ``key``; True when it was already dispatched this process.
+
+    The key should be the tuple of statics + shapes that decides whether
+    jax retraces — first sighting ≙ trace+compile, later ≙ cached execute.
+    """
+    if key in _SEEN_JIT_KEYS:
+        return True
+    _SEEN_JIT_KEYS.add(key)
+    return False
+
+
+@contextmanager
+def jit_span(name: str, key, **meta):
+    """``span`` for a jitted dispatch, tagged compile/execute by cache key."""
+    if not _ACTIVE:
+        # the registry must advance even while nobody records, otherwise the
+        # first *recorded* dispatch of a warm key would be mislabeled compile
+        jit_key_seen(key)
+        yield
+        return
+    cat = "execute" if jit_key_seen(key) else "compile"
+    with span(name, cat=cat, **meta):
+        yield

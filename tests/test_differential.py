@@ -83,12 +83,12 @@ EDGE_ENGINES = ("classic", "ragged", "padded", "sharded", "dynamic-full")
 D2_ENGINES = ("ragged", "sharded")
 
 
-def _edge_color(g: CSRGraph, engine: str, backend: str):
+def _edge_color(g: CSRGraph, engine: str, backend: str, trace: bool = False):
     if engine == "dynamic-full":
         # the dynamic engine's bit-identity surface: cold session coloring,
         # a deterministic delta, then the full-recolor escape hatch — all
         # three route through the ragged fused engine with the backend
-        session = open_session(g, backend=backend)
+        session = open_session(g, backend=backend, trace=trace)
         if g.n >= 2:
             rng = np.random.default_rng(7)
             k = max(1, g.n // 100)
@@ -100,7 +100,7 @@ def _edge_color(g: CSRGraph, engine: str, backend: str):
                 session.recolor()
             return session.recolor(full=True), session.graph
         return session.result, g
-    opts = {"engine": engine, "backend": backend}
+    opts = {"engine": engine, "backend": backend, "trace": trace}
     if engine == "ragged":
         opts["mode"] = "fused"
     return color_data_driven(g, **opts), g
@@ -144,6 +144,39 @@ def test_explicit_buckets_backends_bit_identical(gname):
         np.testing.assert_array_equal(r_jax.colors, r_pal.colors)
         assert r_jax.iterations == r_pal.iterations, (gname, engine)
         assert is_valid_coloring(g, r_pal.colors)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("engine", EDGE_ENGINES)
+@pytest.mark.parametrize("gname", ["rmat-g", "threshold"])
+def test_trace_on_is_bit_identical_and_coherent(gname, engine, backend):
+    """§16 zero-perturbation contract across the engine × backend matrix:
+    ``trace=True`` changes nothing about the coloring (same colors, same
+    iteration count) and the attached ``RunTrace`` passes its structural
+    invariants on every engine realization."""
+    from repro.obs import RunTrace
+
+    g = _graph(gname)
+    r_off, _ = _edge_color(g, engine, backend)
+    r_on, g_on = _edge_color(g, engine, backend, trace=True)
+    np.testing.assert_array_equal(r_off.colors, r_on.colors)
+    assert r_off.iterations == r_on.iterations, (gname, engine, backend)
+    assert r_off.trace is None
+    assert isinstance(r_on.trace, RunTrace), (gname, engine, backend)
+    assert r_on.trace.check(r_on) == [], (gname, engine, backend,
+                                          r_on.trace.check(r_on))
+    assert is_valid_coloring(g_on, r_on.colors)
+
+
+@pytest.mark.parametrize("engine", D2_ENGINES)
+def test_trace_on_distance2_bit_identical(engine):
+    g = _graph("rmat-g")
+    r_off = color_distance2(g, engine=engine)
+    r_on = color_distance2(g, engine=engine, trace=True)
+    np.testing.assert_array_equal(r_off.colors, r_on.colors)
+    assert r_off.iterations == r_on.iterations
+    assert r_off.trace is None and r_on.trace is not None
+    assert r_on.trace.check(r_on) == []
 
 
 def test_pallas_equals_legacy_use_kernel():

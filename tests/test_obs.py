@@ -1,0 +1,390 @@
+"""Telemetry substrate tests (DESIGN.md §16): rings, traces, spans, export.
+
+Four layers, matching the module layout:
+
+* pure ring/record mechanics (``resolve_trace_cap``, ``HostRing``,
+  ``ring_rows``, ``RunTrace`` round-trips) — no jax;
+* engine integration: every engine family called with ``trace=True``
+  attaches a ``RunTrace`` whose structural invariants hold
+  (``retired + conflicts == live`` per row, worklist continuity,
+  ``Σ retired == initial worklist``, ``Σ cells == padded_work`` on
+  single-graph engines) and whose mode-specific work linkage matches
+  ``ColoringResult`` (workefficient: ``Σ live == work_items``; fused:
+  ``Σ conflicts == work_items`` — the boot row charges the first
+  super-step's incoming worklist);
+* conflict counts against hand-built oracles: an edgeless graph retires
+  everything in one conflict-free step, a clique's final ``max_color``
+  is its order, the serial-tail row drains its worklist with
+  ``conflicts == 0``;
+* spans (compile-vs-execute jit attribution) and the Chrome-trace
+  export / text-report round-trip.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import (
+    CSRGraph,
+    color_data_driven,
+    csr_from_edges,
+    is_valid_coloring,
+)
+from repro.core.batch import color_batch_fused
+from repro.d2 import color_distance2
+from repro.graphs import build_graph
+from repro.obs import (
+    NF,
+    HostRing,
+    RunTrace,
+    chrome_trace,
+    empty_trace,
+    export_chrome_trace,
+    jit_span,
+    recorder,
+    resolve_trace_cap,
+    ring_rows,
+    span,
+)
+from repro.obs import report as obs_report
+from repro.obs.spans import jit_key_seen
+
+
+def _suite_graph():
+    return build_graph("rmat-g", 0.01)
+
+
+# ---------------------------------------------------------------- mechanics
+
+
+def test_resolve_trace_cap():
+    assert resolve_trace_cap(False) == 0
+    assert resolve_trace_cap(None) == 0
+    assert resolve_trace_cap(0) == 0
+    assert resolve_trace_cap(-3) == 0
+    assert resolve_trace_cap(True) == 512
+    assert resolve_trace_cap(7) == 7
+    # max_iters bounds the ring (+2 for the host's boot/tail rows)
+    assert resolve_trace_cap(True, max_iters=10) == 12
+    assert resolve_trace_cap(4, max_iters=100) == 4
+
+
+def test_host_ring_drop_oldest():
+    ring = HostRing(3)
+    for i in range(5):
+        ring.append(live=10 - i, retired=1, conflicts=9 - i, max_color=i,
+                    cells=i)
+    rows = ring.rows()
+    assert ring.recorded == 5
+    assert rows.shape == (3, NF)
+    # kept window is the most recent 3 rows, in order
+    np.testing.assert_array_equal(rows[:, 0], [8, 7, 6])
+
+
+def test_device_ring_rows_wrap():
+    cap = 4
+    buf = np.zeros((cap, NF), np.int32)
+    for s in range(6):                       # writes at s % cap
+        buf[s % cap, 0] = 100 + s
+    rows = ring_rows(buf, 6)
+    np.testing.assert_array_equal(rows[:, 0], [102, 103, 104, 105])
+    assert ring_rows(buf, 0).shape == (0, NF)
+    assert ring_rows(buf, 2).shape == (2, NF)
+
+
+def test_runtrace_roundtrip_and_summary():
+    steps = np.array([[8, 0, 8, 1, 0, 0, 0, 0],
+                      [8, 5, 3, 2, 64, 0, 0, 0],
+                      [3, 3, 0, 3, 24, 1, 0, 0]], np.int64)
+    t = RunTrace(steps=steps, iterations=3, engine="unit")
+    assert t.check() == []
+    assert t.tail_step == 2
+    t2 = RunTrace.from_dict(t.to_dict())
+    np.testing.assert_array_equal(t2.steps, t.steps)
+    s = t.summary(max_points=2)
+    assert s["supersteps"] == 3 and s["series_from"] == 1
+    assert s["live"] == [8, 3] and s["conflicts"] == [3, 0]
+    assert "halo_bytes" not in s          # all-zero series is omitted
+
+
+def test_runtrace_check_catches_broken_rows():
+    steps = np.array([[8, 0, 8, 1, 0, 0, 0, 0],
+                      [8, 4, 3, 2, 64, 0, 0, 0]], np.int64)  # 4 + 3 != 8
+    bad = RunTrace(steps=steps, iterations=2).check()
+    assert any("retired + conflicts" in b for b in bad)
+    steps2 = np.array([[8, 0, 8, 1, 0, 0, 0, 0],
+                       [5, 5, 0, 2, 64, 0, 0, 0]], np.int64)  # 8 != live 5
+    bad2 = RunTrace(steps=steps2, iterations=2).check()
+    assert any("continuity" in b for b in bad2)
+
+
+# ---------------------------------------------------- engine integration
+
+
+def _assert_coherent(result, *, batch=False):
+    t = result.trace
+    assert isinstance(t, RunTrace)
+    assert t.check(result) == [], t.check(result)
+    s = t.steps
+    if s.shape[0] == 0:
+        return t
+    if t.dropped == 0:
+        assert int(t.series("retired").sum()) == int(s[0, 0])
+        cells = int(t.series("cells").sum())
+        if batch:
+            assert cells <= result.padded_work
+        else:
+            assert cells == result.padded_work
+    assert int(s[-1, 3]) == result.num_colors
+    return t
+
+
+def test_trace_off_attaches_nothing():
+    g = _suite_graph()
+    assert color_data_driven(g).trace is None
+    assert color_data_driven(g, mode="fused").trace is None
+
+
+@pytest.mark.parametrize("mode", ["workefficient", "fused"])
+def test_single_graph_trace_invariants_and_work_linkage(mode):
+    g = _suite_graph()
+    off = color_data_driven(g, mode=mode, tail_serial=False)
+    on = color_data_driven(g, mode=mode, tail_serial=False, trace=True)
+    np.testing.assert_array_equal(off.colors, on.colors)
+    assert off.iterations == on.iterations
+    t = _assert_coherent(on)
+    assert t.iterations == on.iterations
+    assert t.tail_step == -1
+    # mode-specific work linkage (no tail, no ring drop)
+    if mode == "workefficient":
+        assert int(t.series("live").sum()) == on.work_items
+    else:
+        assert int(t.series("conflicts").sum()) == on.work_items
+
+
+@pytest.mark.parametrize("engine", ["classic", "ragged", "padded"])
+def test_engine_matrix_traces(engine):
+    g = _suite_graph()
+    opts = {"engine": engine, "trace": True}
+    if engine == "ragged":
+        opts["mode"] = "fused"
+    r = color_data_driven(g, **opts)
+    _assert_coherent(r)
+    assert is_valid_coloring(g, r.colors)
+
+
+def test_distance2_trace():
+    g = _suite_graph()
+    r = color_distance2(g, trace=True)
+    t = _assert_coherent(r)
+    assert "superstep_loop" in {e.name for e in t.spans}
+
+
+def test_batch_traces_per_graph():
+    graphs = [build_graph("rmat-g", 0.01), build_graph("G3_circuit", 0.01)]
+    plain = color_batch_fused(graphs)
+    traced = color_batch_fused(graphs, trace=True)
+    for off, on in zip(plain, traced):
+        np.testing.assert_array_equal(off.colors, on.colors)
+        assert off.iterations == on.iterations
+        _assert_coherent(on, batch=True)
+        assert on.trace.spans, "batch results must share the recorded spans"
+
+
+def test_ring_wraparound_keeps_coherent_window():
+    g = _suite_graph()
+    full = color_data_driven(g, mode="fused", tail_serial=False, trace=True)
+    tiny = color_data_driven(g, mode="fused", tail_serial=False, trace=2)
+    t = tiny.trace
+    assert t.iterations == full.trace.iterations
+    assert t.dropped == t.iterations - 2 > 0
+    assert t.check() == [], t.check()        # kept window stays contiguous
+    np.testing.assert_array_equal(t.steps, full.trace.steps[-2:])
+
+
+# -------------------------------------------------------- hand-built oracles
+
+
+def test_edgeless_graph_oracle():
+    """No edges: everything retires in one conflict-free super-step."""
+    n = 17
+    g = CSRGraph(np.zeros(n + 1, np.int64), np.zeros(0, np.int32))
+    r = color_data_driven(g, mode="fused", tail_serial=False, trace=True)
+    t = r.trace
+    np.testing.assert_array_equal(t.series("live"), [n, n])
+    np.testing.assert_array_equal(t.series("conflicts"), [n, 0])
+    np.testing.assert_array_equal(t.series("retired"), [0, n])
+    assert int(t.steps[-1, 3]) == 1          # one color suffices
+
+
+def test_clique_oracle():
+    """K6 needs exactly 6 colors; the trace's final max_color agrees with
+    both the result and the validator's view of the colors array."""
+    k = 6
+    src, dst = np.triu_indices(k, 1)
+    g = csr_from_edges(k, src.astype(np.int64), dst.astype(np.int64))
+    r = color_data_driven(g, mode="fused", tail_serial=False, trace=True)
+    assert is_valid_coloring(g, r.colors)
+    assert r.num_colors == k
+    t = r.trace
+    assert int(t.steps[-1, 3]) == k == int(np.max(r.colors))
+    # conflicts strictly shrink: a clique retires >= 1 vertex per step
+    conf = t.series("conflicts")
+    assert all(conf[i] > conf[i + 1] for i in range(len(conf) - 1))
+
+
+def test_serial_tail_row_semantics():
+    """Force the tail: its row is last, drains the surviving worklist
+    (conflicts == 0), and tail_step points at it."""
+    g = _suite_graph()
+    r = color_data_driven(g, mode="fused", tail_serial=g.n, trace=True)
+    t = r.trace
+    assert t.tail_step >= 0
+    last = t.steps[-1]
+    assert int(last[5]) == 1 and int(last[2]) == 0
+    assert t.tail_step == t.dropped + t.steps.shape[0] - 1
+    assert t.check(r) == [], t.check(r)
+
+
+def test_empty_graph_trace():
+    g = CSRGraph(np.zeros(1, np.int64), np.zeros(0, np.int32))
+    r = color_data_driven(g, trace=True)
+    assert r.trace is not None
+    assert r.trace.iterations == 0 and r.trace.check(r) == []
+    assert empty_trace("x").tail_step == -1
+
+
+# ------------------------------------------------------------------- spans
+
+
+def test_span_noop_without_recorder():
+    with span("never_kept"):
+        pass
+    with recorder() as rec:
+        with span("kept", answer=42):
+            pass
+    assert [e.name for e in rec.events] == ["kept"]
+    assert rec.events[0].meta == {"answer": 42}
+
+
+def test_jit_span_compile_then_execute():
+    key = ("test_obs", "unique-key-A")
+    with recorder() as rec:
+        with jit_span("dispatch", key):
+            pass
+        with jit_span("dispatch", key):
+            pass
+    cats = [e.cat for e in rec.events]
+    assert cats == ["compile", "execute"]
+    agg = rec.by_name()["dispatch"]
+    assert agg["count"] == 2
+    assert agg["compile_seconds"] <= agg["seconds"]
+
+
+def test_jit_key_registry_advances_unrecorded():
+    """A dispatch nobody recorded still warms the key, so the first
+    *recorded* dispatch of a warm key is labeled execute, not compile."""
+    key = ("test_obs", "unique-key-B")
+    with jit_span("dispatch", key):          # no recorder active
+        pass
+    assert jit_key_seen(key) is True
+    with recorder() as rec:
+        with jit_span("dispatch", key):
+            pass
+    assert rec.events[0].cat == "execute"
+
+
+def test_engine_spans_visible_to_outer_recorder():
+    g = _suite_graph()
+    with recorder() as rec:
+        r = color_data_driven(g, mode="fused", trace=True)
+    names = {e.name for e in rec.events}
+    assert {"csr_build", "superstep_loop"} <= names
+    # the engine's internal recorder captured the same phases on the trace
+    assert {"csr_build", "superstep_loop"} <= {e.name for e in r.trace.spans}
+
+
+def test_session_metrics_and_jit_cache_accounting():
+    g = _suite_graph()
+    session = api.open_session(g, trace=True)
+    rng = np.random.default_rng(5)
+    from repro.dynamic import churn_delta
+
+    for _ in range(2):
+        rem, add = churn_delta(session.graph, 0.02, rng)
+        session.apply_delta(remove_edges=rem, add_edges=add)
+        inc = session.recolor()
+    assert inc.trace is not None and inc.trace.check(inc) == []
+    assert inc.trace.spans, "session recolor must attach spans"
+    m = session.metrics()
+    assert m["deltas"] == 2 and m["recolors"] == 2
+    assert m["engine_cache_hits"] + m["engine_cache_misses"] == 2
+    assert m["engine_cache_misses"] >= 1     # first round always compiles
+    assert m["supersteps_total"] > 0 and m["work_total"] > 0
+    assert m["pending_frontier"] == 0
+    assert session.validate()
+
+
+# ------------------------------------------------------- export and report
+
+
+def test_chrome_export_roundtrip(tmp_path):
+    g = _suite_graph()
+    r = color_data_driven(g, mode="fused", trace=True)
+    path = tmp_path / "trace.json"
+    export_chrome_trace(str(path), {"fused/rmat-g": r})
+    doc = json.loads(path.read_text())
+    phases = {e["ph"] for e in doc["traceEvents"]}
+    assert phases <= {"M", "X", "C", "I"}
+    assert any(e["ph"] == "X" and e["name"] == "superstep_loop"
+               for e in doc["traceEvents"])
+    counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert len([e for e in counters if e["name"] == "worklist"]) \
+        == r.trace.steps.shape[0]
+    # otherData.repro reconstructs the full RunTrace
+    back = RunTrace.from_dict(doc["otherData"]["repro"]["fused/rmat-g"])
+    np.testing.assert_array_equal(back.steps, r.trace.steps)
+    # the text reporter accepts the exported file
+    assert obs_report.main([str(path)]) == 0
+
+
+def test_chrome_export_skips_untraced_runs():
+    g = _suite_graph()
+    doc = chrome_trace({"off": color_data_driven(g)})
+    assert doc["traceEvents"] == [] and doc["otherData"]["repro"] == {}
+
+
+def test_report_formats():
+    g = _suite_graph()
+    r = color_data_driven(g, mode="fused", trace=True)
+    line = obs_report.format_result("fused", r)
+    assert "colors=" in line and "work=" in line
+    table = obs_report.format_trace(r.trace, last=3)
+    assert "live" in table and str(r.trace.iterations) in table
+    assert obs_report.format_spans(r.trace.spans).count("\n") >= 1
+    block = obs_report.format_metrics({"a": 1, "bb": 2.5}, "t:")
+    assert block.splitlines()[0] == "t:" and " a " in block
+
+
+def test_report_bench_document(tmp_path):
+    doc = {
+        "schema": 6, "backend": "jax", "engine": "ragged",
+        "algorithms": {"fused": {"g": {
+            "colors": 3, "valid": True,
+            "trace": {"supersteps": 2, "tail_step": -1, "series_from": 0,
+                      "live": [4, 4], "retired": [0, 4],
+                      "conflicts": [4, 0], "max_color": [1, 3],
+                      "cells": [0, 32]},
+        }}},
+        "dynamic": {"g": {
+            "rounds_detail": [{"round": 0, "frontier": 9, "work": 40,
+                               "supersteps": 3, "tail_step": 2,
+                               "cache_hit": False}],
+            "jit": {"hits": 0, "misses": 1},
+        }},
+    }
+    p = tmp_path / "BENCH_x.json"
+    p.write_text(json.dumps(doc))
+    assert obs_report.main([str(p)]) == 0
+    assert obs_report.main([str(tmp_path / "missing--"), "x"]) == 2

@@ -160,6 +160,118 @@ def test_roofline_nonpositive_rate_fails():
     assert any("achieved_bytes_per_s 0.0 <= 0" in f for f in fails)
 
 
+def _trace_section():
+    # rows satisfy retired + conflicts == live (boot, two live steps, tail)
+    return {"supersteps": 4, "tail_step": 3, "series_from": 0,
+            "live": [8, 8, 5, 2], "retired": [0, 3, 3, 2],
+            "conflicts": [8, 5, 2, 0], "max_color": [1, 2, 3, 3],
+            "cells": [0, 64, 40, 16]}
+
+
+def _schema6_doc():
+    doc = copy.deepcopy(DOC)
+    doc["schema"] = 6
+    doc["backend"] = "jax"
+    for rec in doc["algorithms"]["fused"].values():
+        rec["trace"] = _trace_section()
+    doc["dynamic"]["rmat-g"]["rounds_detail"] = [
+        {"round": 0, "frontier": 40, "work": 200, "supersteps": 3,
+         "tail_step": 2, "cache_hit": False},
+        {"round": 1, "frontier": 38, "work": 190, "supersteps": 3,
+         "tail_step": 2, "cache_hit": True},
+    ]
+    doc["dynamic"]["rmat-g"]["jit"] = {"hits": 1, "misses": 1}
+    return doc
+
+
+SCHEMA6_BASELINE = make_baseline([_schema6_doc()])
+
+
+def test_schema6_clean_document_passes():
+    fails, _ = check(_schema6_doc(), SCHEMA6_BASELINE)
+    assert fails == []
+
+
+def test_schema6_missing_trace_on_traced_algorithm_fails():
+    doc = _schema6_doc()
+    del doc["algorithms"]["fused"]["rmat-g"]["trace"]
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("missing its 'trace' section" in f for f in fails)
+    # untraced algorithms are exempt: topology-family records carry none
+    doc["algorithms"]["serial"] = {
+        "rmat-g": {"colors": 5, "valid": True}}
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert not any("serial" in f for f in fails)
+
+
+def test_schema6_trace_integrity_failures():
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["trace"]["live"] = [8, 8]  # len 2
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("series lengths differ" in f for f in fails)
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["trace"]["retired"][1] = -3
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("negative entry" in f for f in fails)
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["trace"]["conflicts"][2] = 7
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("retired + conflicts == live" in f for f in fails)
+    doc = _schema6_doc()
+    del doc["algorithms"]["fused"]["rmat-g"]["trace"]["tail_step"]
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("trace section missing" in f for f in fails)
+
+
+def test_schema6_superstep_count_regression_fails():
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["trace"]["supersteps"] = 9
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("supersteps regressed 4 -> 9" in f for f in fails)
+
+
+def test_schema6_earlier_tail_trigger_fails():
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["trace"]["tail_step"] = 1
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("serial tail triggers at step 1" in f for f in fails)
+    # tail firing where the baseline never tailed is also a regression
+    base = copy.deepcopy(SCHEMA6_BASELINE)
+    base["algorithms"]["fused"]["rmat-g"]["tail_step"] = -1
+    fails, _ = check(_schema6_doc(), base)
+    assert any("serial tail triggers" in f for f in fails)
+    # and LATER (or never) is fine
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["trace"]["tail_step"] = -1
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert fails == []
+
+
+def test_schema6_dynamic_jit_and_rounds_gates():
+    doc = _schema6_doc()
+    del doc["dynamic"]["rmat-g"]["rounds_detail"]
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("missing its \nrounds_detail/jit sections".replace("\n", "")
+               in f for f in fails)
+    doc = _schema6_doc()
+    doc["dynamic"]["rmat-g"]["jit"]["misses"] = 5  # baseline cap: 1
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("jit misses 5 exceed the" in f for f in fails)
+
+
+def test_schema6_baseline_roundtrip():
+    base = make_baseline([_schema6_doc()])
+    rec = base["algorithms"]["fused"]["rmat-g"]
+    assert rec["supersteps"] == 4 and rec["tail_step"] == 3
+    assert base["dynamic"]["rmat-g"]["max_jit_misses"] == 1
+    # legacy documents produce baselines without the schema-6 fields,
+    # and checking a schema-6 doc against them stays green (no caps)
+    legacy = make_baseline([DOC])
+    assert "supersteps" not in legacy["algorithms"]["fused"]["rmat-g"]
+    fails, _ = check(_schema6_doc(), legacy)
+    assert fails == []
+
+
 def test_main_exit_codes_and_baseline_roundtrip(tmp_path):
     doc_path = tmp_path / "bench.json"
     base_path = tmp_path / "baseline.json"
@@ -192,3 +304,9 @@ def test_checked_in_baseline_matches_repo_layout():
     assert base["dynamic"], "dynamic churn records missing"
     for rec in base["dynamic"].values():
         assert rec["min_work_ratio"] >= MIN_WORK_RATIO
+        assert rec["max_jit_misses"] >= 1  # schema 6: jit-stability cap
+    # schema-6 convergence-schedule caps on the traced algorithms
+    for alg in ("data_driven", "fused", "distance2", "dynamic"):
+        for rec in base["algorithms"][alg].values():
+            assert rec["supersteps"] > 0
+            assert rec["tail_step"] >= -1
