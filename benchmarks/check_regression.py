@@ -29,7 +29,13 @@ fails (exit 1) when any produced record
 * is a schema-6 ``dynamic`` record whose ``jit.misses`` exceeds the
   baseline's ``max_jit_misses`` — the §14/§15 jit-cache-stability
   contract (pow2-padded shapes keep churn rounds on compiled code)
-  regressed to per-round retracing.
+  regressed to per-round retracing;
+* carries a non-empty ``degradations`` list (schema 7, §17) whose stages
+  are not whitelisted by the baseline record's ``allowed_degradations``
+  — a bench run that silently left the clean fast path (ingest repairs
+  firing on a supposedly-clean suite graph, or the guarantee ladder
+  escalating a run that should converge on its own) is a robustness
+  regression even when the colors come out right.
 
 Color comparisons only apply when the document's ``scale`` matches the
 baseline's (the weekly ``--scale small`` run still gets validity/error
@@ -130,6 +136,16 @@ def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
             return
         if rec.get("valid") is False:
             fails.append(f"{where}: INVALID coloring")
+        degr = rec.get("degradations") or []
+        if degr:
+            allowed = set((base_rec or {}).get("allowed_degradations", []))
+            stages = sorted({d.get("stage", "?") for d in degr})
+            unexpected = [s for s in stages if s not in allowed]
+            if unexpected:
+                fails.append(
+                    f"{where}: unexpected degradations {unexpected} — the "
+                    "run left the §17 clean fast path (whitelist via "
+                    "'allowed_degradations' in the baseline if intentional)")
         roofline_ok(where, rec)
         if base_rec is None:
             if same_scale:
@@ -200,7 +216,7 @@ def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
 
 def make_baseline(docs: list[dict]) -> dict:
     """Distill produced documents into the checked-in baseline shape."""
-    out: dict = {"schema": 6, "scale": None, "algorithms": {},
+    out: dict = {"schema": 7, "scale": None, "algorithms": {},
                  "bipartite": {}, "dynamic": {}}
     for doc in docs:
         out["scale"] = doc.get("scale", out["scale"])
@@ -214,6 +230,12 @@ def make_baseline(docs: list[dict]) -> dict:
                 if t and "supersteps" in t:
                     slot[name]["supersteps"] = t["supersteps"]
                     slot[name]["tail_step"] = t.get("tail_step", -1)
+                degr = rec.get("degradations") or []
+                if degr:
+                    # --write-baseline is the explicit acceptance action:
+                    # stages present in the accepted run become the whitelist
+                    slot[name]["allowed_degradations"] = sorted(
+                        {d.get("stage", "?") for d in degr})
         for name, rec in doc.get("bipartite", {}).items():
             if "groups" in rec:
                 out["bipartite"][name] = {"groups": rec["groups"]}

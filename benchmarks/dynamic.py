@@ -91,6 +91,8 @@ def _churn_once(name: str, scale: float, rounds: int = 4,
         "work_ratio": round(w_cold / max(w_inc, 1), 2),
         "seconds_inc": round(min(t_inc), 6),
         "seconds_cold": round(min(t_cold), 6),
+        "degradations": [dict(d) for d in
+                         getattr(session.result, "degradations", ())],
     }
     if not trace:
         return rec

@@ -115,7 +115,7 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
     graphs = {name: build_graph(name, json_scale) for name in JSON_GRAPHS}
     doc = {
-        "schema": 6,
+        "schema": 7,
         "scale": json_scale,
         "engine": engine,
         "backend": backend,
@@ -149,6 +149,10 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
                 "backend": opts.get("backend", "-"),
                 "halo_bytes_per_step": round(
                     getattr(r, "halo_bytes_per_step", 0.0), 1),
+                # §17 robustness ledger: non-empty means the run left the
+                # clean fast path; the CI gate fails on unexpected stages
+                "degradations": [dict(d) for d in
+                                 getattr(r, "degradations", ())],
             }
             if getattr(r, "class_cells", ()):
                 # the kernel path gathers colors/degrees separately (no
@@ -174,6 +178,8 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
         "seconds": round(seconds, 6),
         "compile_seconds": round(compile_s, 6),
         "valid": bool(validate_bipartite(bg, cr.coloring.colors)),
+        "degradations": [dict(d) for d in
+                         getattr(cr.coloring, "degradations", ())],
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
@@ -209,7 +215,7 @@ def bench_dynamic_json_doc(path: str = JSON_PATH,
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
     records, runs = bench_dynamic_json(json_scale, backend=backend)
     doc = {
-        "schema": 6,
+        "schema": 7,
         "scale": json_scale,
         "engine": "dynamic",
         "backend": backend,

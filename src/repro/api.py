@@ -103,13 +103,83 @@ def get_algorithm(name: str) -> Callable:
         ) from None
 
 
-def color(graph: "CSRGraph", algorithm: str = "data_driven", **opts) -> "ColoringResult":
+def color(graph: "CSRGraph", algorithm: str = "data_driven", *,
+          validate_input: str | None = None, ensure_valid: bool = False,
+          **opts) -> "ColoringResult":
     """Color ``graph`` with the named algorithm; extra ``opts`` pass through.
 
     Returns a ``ColoringResult``; ``result.colors`` is an int32 array in
     ``[1, num_colors]`` and ``result.num_colors`` the color count.
+
+    Robustness knobs (DESIGN.md §17):
+
+    ``validate_input`` runs the ``repro.ingest.sanitize_csr`` front door on
+    a ``CSRGraph`` input first — ``"strict"`` raises ``IngestError`` with a
+    structured report on any defect (asymmetry, self-loops, duplicates,
+    unsorted rows, bad indices, broken indptr), ``"repair"`` fixes the
+    input and records every action on ``result.degradations``.
+
+    ``ensure_valid=True`` guarantees the returned coloring validates
+    against the algorithm's conflict relation: a run that failed to
+    converge (or returned corrupt colors) is escalated through the §17
+    guarantee ladder — deterministic reseed → full iteration budget →
+    serialize-the-survivors → serial oracle — instead of surfacing an
+    error.  Every escalation taken is recorded in
+    ``result.degradations`` and emitted as ``guarantee_ladder`` obs spans.
     """
-    return get_algorithm(algorithm)(graph, **opts)
+    fn = get_algorithm(algorithm)
+    pre = ()
+    if validate_input is not None:
+        from repro.core.csr import CSRGraph as _CSR
+        from repro.ingest import sanitize_csr
+
+        if not isinstance(graph, _CSR):
+            raise TypeError(
+                "validate_input= applies to CSRGraph inputs; got "
+                f"{type(graph).__name__} (sanitize bipartite halves with "
+                "sanitize_csr(..., require_symmetric=False) directly)")
+        graph, report = sanitize_csr(graph, policy=validate_input)
+        pre = report.degradations()
+    result = fn(graph, **opts)
+    if pre:
+        result.degradations = pre + tuple(result.degradations)
+    if ensure_valid:
+        result = _apply_ladder(graph, algorithm, fn, opts, result)
+    return result
+
+
+def _apply_ladder(graph, algorithm: str, fn: Callable, opts: dict, result):
+    """Escalate ``result`` through the §17 guarantee ladder (see above)."""
+    from repro.core.guarantee import ensure_valid_result, square_graph
+    from repro.obs.spans import SpanRecorder
+
+    if algorithm == "bipartite":
+        cg = graph.column_conflict_graph()
+    elif algorithm == "distance2":
+        cg = square_graph(graph)
+    else:
+        cg = graph
+
+    def rerun(rung):
+        o = dict(opts)
+        if rung == "reseed":
+            cur = o.get("heuristic", "degree")
+            o["heuristic"] = "id" if cur == "degree" else "degree"
+        elif rung == "budget_extension":
+            o["max_iters"] = None  # the engine default: always enough
+            if o.get("tail_serial", "auto") is None:
+                o["tail_serial"] = "auto"
+        return fn(graph, **o)
+
+    if result.trace is not None:
+        # §16 surfacing: ladder spans land on the run's own trace even
+        # without a user recorder (an outer recorder still sees them)
+        with SpanRecorder() as rec:
+            out = ensure_valid_result(cg, result, rerun)
+        if out.trace is not None and rec.events:
+            out.trace.spans = list(out.trace.spans or []) + rec.events
+        return out
+    return ensure_valid_result(cg, result, rerun)
 
 
 def color_batch(

@@ -42,6 +42,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.coloring import (
     ColoringResult,
     DenseRows,
+    _packed_gather_ok,
     _stalled,
     order_tail,
     ragged_superstep,
@@ -87,6 +88,7 @@ class GraphBatch:
         graphs: Sequence[CSRGraph],
         width: int | None = None,
         distance2: bool = False,
+        validate_input: str | None = None,
     ) -> "GraphBatch":
         """Pack ``graphs``; ``width`` may widen (never narrow) the adjacency.
 
@@ -95,8 +97,20 @@ class GraphBatch:
         loser rule — the same convention as ``repro.d2.color_distance2``'s
         precomputed strategy, so batched D2 stays bit-identical to per-graph
         fused D2 runs (DESIGN.md §11).
+
+        ``validate_input="strict"|"repair"`` runs every member through the
+        §17 ingest front door before packing (padded rows silently absorb a
+        malformed CSR — an unsorted or duplicated row packs into garbage
+        adjacency slots without erroring, so the batch is where validation
+        pays off most).
         """
         graphs = list(graphs)
+        if validate_input is not None:
+            from repro.ingest import sanitize_csr
+
+            graphs = [
+                sanitize_csr(g, policy=validate_input)[0] for g in graphs
+            ]
         sizes = tuple(g.n for g in graphs)
         n_max = max(sizes, default=0)
         adj_graphs = [g.square() for g in graphs] if distance2 else graphs
@@ -351,7 +365,7 @@ def color_batch_fused(
             [resolve_tail_threshold(tail_serial, n)[1] for n in batch.sizes],
             dtype=np.int32,
         )
-        pack = batch.width < 2**15 - 1
+        pack = _packed_gather_ok(batch.width)
         loop_key = ("batch", batch.B, batch.n_max, batch.width, heuristic,
                     firstfit, use_kernel, tail_enabled, pack, max_iters,
                     trace_cap)

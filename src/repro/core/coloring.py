@@ -95,6 +95,14 @@ jax.tree_util.register_pytree_node(
 STALL_NUM, STALL_DEN = 9, 10
 
 
+def _packed_gather_ok(dmax: int, color_bound: int | None = None) -> bool:
+    """§17 capacity predicate for the color|deg<<16 packed gather (lazy
+    import — ``repro.ingest`` imports ``core.csr`` through the package)."""
+    from repro.ingest import packed_gather_ok
+
+    return packed_gather_ok(dmax, color_bound)
+
+
 @dataclasses.dataclass
 class ColoringResult:
     colors: np.ndarray
@@ -115,6 +123,12 @@ class ColoringResult:
     # was traced (``trace=True``), else None.  ``trace`` is a STATIC knob —
     # untraced runs compile the identical program and stay bit-identical.
     trace: object = None
+    # §17 robustness ledger: every deviation from the clean fast path —
+    # ingest repairs applied to the input, guarantee-ladder escalations
+    # taken to reach a valid coloring — as JSON-safe dicts with a "stage"
+    # key.  Empty on every healthy run; the CI regression gate fails on
+    # unexpected entries in BENCH records.
+    degradations: tuple = ()
 
     @property
     def num_colors(self) -> int:
@@ -535,6 +549,15 @@ def run_ragged_engine(
     is static: ``trace=False`` dispatches the exact pre-§16 programs, so
     untraced runs stay bit-identical and pay nothing.
     """
+    if pack_degrees and not _packed_gather_ok(tail_width):
+        # §17 capacity guard: the packed color|deg<<16 word would overflow
+        # int32 past deg 2^15 — silent color corruption, so refuse loudly
+        from repro.ingest import PACKED_GATHER_MAX_DEG
+
+        raise ValueError(
+            f"pack_degrees=True with tail_width={tail_width}: degrees must "
+            f"stay < {PACKED_GATHER_MAX_DEG} to fit the packed gather word "
+            "(color | deg << 16, int32); rerun with pack_degrees=False")
     caps0 = [int(c.shape[0]) for c in classes]
     counts_init = (caps0 if class_counts is None
                    else [int(c) for c in class_counts])
@@ -1108,7 +1131,7 @@ def color_data_driven(
             tail_enabled=tail_enabled,
             tail_threshold=thr,
             max_iters=max_iters,
-            pack_degrees=dmax < 2**15 - 1,
+            pack_degrees=_packed_gather_ok(dmax),
             trace=trace,
         )
 

@@ -482,7 +482,8 @@ class PartitionedCSR:
 
     @classmethod
     def from_graph(
-        cls, g: "CSRGraph", ndev: int, *, boundary_mode: str = "edge"
+        cls, g: "CSRGraph", ndev: int, *, boundary_mode: str = "edge",
+        validate_input: str | None = None,
     ) -> "PartitionedCSR":
         """Partition ``g`` balancing ``degree + 1`` per contiguous range.
 
@@ -491,7 +492,16 @@ class PartitionedCSR:
         ``"two_hop"`` when its *two-hop* neighborhood crosses (the reader
         set of distance-2 coloring) — a vertex or any of its neighbors has
         a cross-partition edge.
+
+        ``validate_input="strict"|"repair"`` runs ``g`` through the §17
+        ingest front door first: an asymmetric CSR silently breaks the
+        halo-exchange invariant (a boundary vertex the other side doesn't
+        know to send), so sanitize before partitioning.
         """
+        if validate_input is not None:
+            from repro.ingest import sanitize_csr
+
+            g, _ = sanitize_csr(g, policy=validate_input)
         n = g.n
         starts = balanced_starts(g.degrees.astype(np.int64) + 1, ndev)
         owner = (

@@ -49,6 +49,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.coloring import (
     ColoringResult,
     _graph_device_cache,
+    _packed_gather_ok,
     _resolve_classes,
     _stalled,
     compact,
@@ -136,6 +137,16 @@ def _build_step(mesh, *, provider_kind: str, n: int, n_loc: int,
     (``n < 2**15``; colors are bounded by n), halving the exchange bytes
     the same way ``pack_degrees`` halves the neighbor gathers (§12).
     """
+    if pack_halo:
+        # §17 capacity guard: ids >= 2^15 flip the int32 sign bit inside
+        # id << 16 and unpack as garbage neighbors — refuse, never corrupt
+        from repro.ingest import PACKED_HALO_MAX_N, packed_halo_ok
+
+        if not packed_halo_ok(n):
+            raise ValueError(
+                f"pack_halo=True with n={n}: vertex ids must stay < "
+                f"{PACKED_HALO_MAX_N} to fit the id << 16 | color halo "
+                "word (int32); rerun with pack_halo=False")
     K = len(tile_widths)
 
     def step(prov, start, bmask, deg_ext, view, swl, *wls):
@@ -311,7 +322,9 @@ def run_sharded_engine(
     padded = 0
     halo_bytes = 0
     stalled = False
-    pack_halo = n < 2**15  # id and color both provably fit 15/16 bits
+    from repro.ingest import packed_halo_ok
+
+    pack_halo = packed_halo_ok(n)  # id and color both provably fit 15/16 bits
     halo_entry_bytes = 4 if pack_halo else 8
     # ONE cached jitted step per config; the pow2-resliced swl width below
     # retraces it per distinct shape exactly as jit always does
@@ -468,7 +481,7 @@ def color_distributed(
             heuristic=heuristic, kind=firstfit, tail_enabled=tail_enabled,
             tail_threshold=thr, max_iters=max_iters,
             algorithm=f"sharded_sgr_{ndev}dev",
-            pack_degrees=dmax < 2**15 - 1,
+            pack_degrees=_packed_gather_ok(dmax),
             trace=trace,
         )
 

@@ -350,13 +350,25 @@ class CompressionResult:
         return seed
 
 
-def compress_jacobian_pattern(pattern, **opts) -> CompressionResult:
+def compress_jacobian_pattern(pattern, *, on_fail: str = "ladder",
+                              **opts) -> CompressionResult:
     """Color a Jacobian sparsity pattern into structurally-orthogonal groups.
 
     ``pattern`` may be a ``BipartiteGraph``, a dense (n_rows, n_cols)
     boolean/nonzero mask, or a ``(n_rows, n_cols, rows, cols)`` COO tuple.
     Extra ``opts`` pass through to ``color_bipartite``.
+
+    A run that exhausts ``max_iters`` before converging is escalated
+    through the §17 guarantee ladder on the column-conflict graph (every
+    rung recorded in ``result.coloring.degradations``), so the returned
+    partition is always total — uncolored (color-0) columns would silently
+    vanish from the groups, breaking the invariant the seed matrix relies
+    on.  ``on_fail="raise"`` restores the old refuse-with-ValueError
+    behavior instead.
     """
+    if on_fail not in ("ladder", "raise"):
+        raise ValueError(
+            f"unknown on_fail {on_fail!r}; options: ladder, raise")
     if isinstance(pattern, BipartiteGraph):
         bg = pattern
     elif isinstance(pattern, tuple) and len(pattern) == 4:
@@ -364,14 +376,28 @@ def compress_jacobian_pattern(pattern, **opts) -> CompressionResult:
     else:
         bg = BipartiteGraph.from_dense(pattern)
     result = color_bipartite(bg, **opts)
-    if not result.converged:
-        # uncolored (color-0) columns would silently vanish from the groups,
-        # breaking the partition invariant the seed matrix relies on
+    if not result.converged and on_fail == "raise":
         raise ValueError(
             f"bipartite coloring did not converge after {result.iterations} "
             f"super-steps (raise max_iters); refusing to build a partial "
             f"column partition"
         )
+    if not result.converged:
+        from repro.core.guarantee import ensure_valid_result
+
+        def rerun(rung):
+            o = dict(opts)
+            if rung == "reseed":
+                cur = o.get("heuristic", "degree")
+                o["heuristic"] = "id" if cur == "degree" else "degree"
+            elif rung == "budget_extension":
+                o["max_iters"] = None
+                if o.get("tail_serial", "auto") is None:
+                    o["tail_serial"] = "auto"
+            return color_bipartite(bg, **o)
+
+        result = ensure_valid_result(bg.column_conflict_graph(), result,
+                                     rerun)
     groups = [
         np.where(result.colors == c)[0].astype(np.int32)
         for c in range(1, result.num_colors + 1)

@@ -39,6 +39,7 @@ from repro.api import register
 from repro.core.coloring import (
     ColoringResult,
     _chunk_bounds,
+    _packed_gather_ok,
     _resolve_classes,
     compact,
     cr_flags,
@@ -234,7 +235,7 @@ def run_d2_engine(
         max_iters=max_iters, algorithm=algorithm,
         # colors <= tail_width + 1; the loser rule's degrees are bounded by
         # deg_bound (the caller's original/column degrees)
-        pack_degrees=max(tail_width, deg_bound) < 2**15 - 1,
+        pack_degrees=_packed_gather_ok(max(tail_width, deg_bound)),
         trace=trace,
     )
 
@@ -296,7 +297,7 @@ def run_sharded_d2_engine(
         tail_width=tail_width, tail_provider=tail_provider,
         heuristic=heuristic, kind=kind, tail_enabled=tail_enabled,
         tail_threshold=thr, max_iters=max_iters, algorithm=algorithm,
-        pack_degrees=max(tail_width, deg_bound) < 2**15 - 1,
+        pack_degrees=_packed_gather_ok(max(tail_width, deg_bound)),
         include_first_hop=include_first_hop, trace=trace,
     )
 

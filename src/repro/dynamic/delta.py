@@ -78,7 +78,17 @@ def _clean_pairs(src, dst, n: int) -> np.ndarray:
 class DeltaCSR:
     """Mutable graph = immutable CSR base + sorted add/delete key overlay."""
 
-    def __init__(self, base: CSRGraph, *, compact_frac: float = 0.25):
+    def __init__(self, base: CSRGraph, *, compact_frac: float = 0.25,
+                 validate_input: str | None = None):
+        self.ingest_report = None
+        if validate_input is not None:
+            # §17 front door: overlay invariants (sorted keys, symmetry,
+            # no dups/loops) inherit from the base — a dirty base corrupts
+            # every later membership query, so sanitize it on the way in
+            from repro.ingest import sanitize_csr
+
+            base, self.ingest_report = sanitize_csr(
+                base, policy=validate_input)
         self._base = base
         self._base_keys = _graph_keys(base)
         self._n = base.n
@@ -93,6 +103,33 @@ class DeltaCSR:
         from repro.core.csr import csr_from_edges
 
         return cls(csr_from_edges(n, src, dst), **kw)
+
+    # -- durable state (§17 session checkpoints) -----------------------------
+    def state_arrays(self) -> dict:
+        """The full mutable state as named numpy arrays (snapshot format)."""
+        return {
+            "base_row_offsets": self._base.row_offsets.astype(np.int64),
+            "base_col_indices": self._base.col_indices.astype(np.int32),
+            "add_keys": self._add,
+            "del_keys": self._del,
+            "delta_n": np.asarray(self._n, np.int64),
+        }
+
+    @classmethod
+    def from_state(cls, arrays: dict, *, compact_frac: float = 0.25,
+                   compactions: int = 0) -> "DeltaCSR":
+        """Rebuild a ``DeltaCSR`` from ``state_arrays()`` output."""
+        base = CSRGraph(
+            np.asarray(arrays["base_row_offsets"], np.int64),
+            np.asarray(arrays["base_col_indices"], np.int32))
+        d = cls(base, compact_frac=compact_frac)
+        d._add = np.asarray(arrays["add_keys"], np.int64)
+        d._del = np.asarray(arrays["del_keys"], np.int64)
+        d._n = int(arrays["delta_n"])
+        d.compactions = int(compactions)
+        if d._add.size or d._del.size or d._n != base.n:
+            d._cache = None
+        return d
 
     # -- current-state views -------------------------------------------------
     @property
@@ -152,6 +189,13 @@ class DeltaCSR:
         count = int(count)
         if count < 0:
             raise ValueError(f"cannot add {count} vertices")
+        from repro.ingest import INDEX_MAX
+
+        if self._n + count > INDEX_MAX:
+            raise ValueError(
+                f"adding {count} vertices would push n past the int32 "
+                f"index capacity ({INDEX_MAX}); colors and worklists are "
+                "int32 device arrays")
         ids = np.arange(self._n, self._n + count, dtype=np.int32)
         if count:
             self._n += count

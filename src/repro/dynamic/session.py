@@ -40,6 +40,7 @@ from repro.api import register
 from repro.core.coloring import (
     ColoringResult,
     _graph_device_cache,
+    _packed_gather_ok,
     _resolve_classes,
     color_data_driven,
     resolve_tail_threshold,
@@ -101,6 +102,22 @@ def open_session(rows, cols=None, *, n: int | None = None,
     return ColoringSession(g, **opts)
 
 
+def _edge_payload(pair):
+    """COO edge-batch args as a JSON-safe journal payload (None passes)."""
+    if pair is None:
+        return None
+    src, dst = pair
+    return [np.asarray(src).astype(int).tolist(),
+            np.asarray(dst).astype(int).tolist()]
+
+
+def _payload_edges(payload):
+    """Inverse of ``_edge_payload`` for journal replay."""
+    if payload is None:
+        return None
+    return (np.asarray(payload[0], np.int64), np.asarray(payload[1], np.int64))
+
+
 class ColoringSession:
     """Persistent coloring of one mutating graph (DeltaCSR + §12 engine)."""
 
@@ -108,24 +125,62 @@ class ColoringSession:
                  firstfit: str = "bitset", mode: str = "fused",
                  tiling="auto", tail_serial="auto",
                  max_iters: int | None = None, compact_frac: float = 0.25,
-                 backend: str | None = None, trace=False):
+                 backend: str | None = None, trace=False,
+                 validate_input: str | None = None, on_fail: str = "raise",
+                 durable_dir: str | None = None, snapshot_every: int = 64):
         from repro.dynamic.delta import DeltaCSR
-        from repro.kernels.dispatch import resolve_backend
 
+        if validate_input is not None and isinstance(graph, CSRGraph):
+            from repro.ingest import sanitize_csr
+
+            graph, self.ingest_report = sanitize_csr(
+                graph, policy=validate_input)
+        else:
+            self.ingest_report = None
         self.delta = (graph if isinstance(graph, DeltaCSR)
                       else DeltaCSR(graph, compact_frac=compact_frac))
+        self._configure(
+            heuristic=heuristic, firstfit=firstfit, mode=mode, tiling=tiling,
+            tail_serial=tail_serial, max_iters=max_iters,
+            compact_frac=compact_frac, backend=backend, trace=trace,
+            on_fail=on_fail, snapshot_every=snapshot_every)
+        self.result = self._cold(self.delta.graph())
+        if not self.result.converged and self._on_fail == "ladder":
+            self.result = self._escalate(self.result, True)
+        self.colors = self.result.colors
+        if durable_dir is not None:
+            from repro.dynamic.journal import SessionJournal
+
+            self._journal = SessionJournal(durable_dir, fresh=True)
+            self.checkpoint()
+
+    def _configure(self, *, heuristic, firstfit, mode, tiling, tail_serial,
+                   max_iters, compact_frac, backend, trace, on_fail,
+                   snapshot_every) -> None:
+        from repro.kernels.dispatch import resolve_backend
+
+        if on_fail not in ("raise", "ladder"):
+            raise ValueError(
+                f"unknown on_fail {on_fail!r}; options: raise, ladder")
         self._heuristic = heuristic
         self._firstfit = firstfit
         self._mode = mode
-        self._tiling = tiling
+        self._tiling = tuple(tiling) if isinstance(tiling, list) else tiling
         self._tail_serial = tail_serial
         self._max_iters = max_iters
+        self._compact_frac = compact_frac
         # §15: frontier recolors reuse the fused superstep kernel — the
         # pow2-padded worklists below already keep its jit cache keys stable
         self._backend = backend
         self._use_kernel = resolve_backend(backend) == "pallas"
         # §16: trace knob threads to the cold and every frontier recolor
         self._trace = trace
+        # §17: non-convergence policy + durability plumbing
+        self._on_fail = on_fail
+        self._snapshot_every = int(snapshot_every)
+        self._journal = None
+        self._records_since_snapshot = 0
+        self.recovery = None
         self._dirty: list[np.ndarray] = []
         # cumulative session counters behind .metrics(); engine cache
         # hits/misses track the (shape, static-args) keys THIS session has
@@ -139,8 +194,6 @@ class ColoringSession:
             "engine_cache_hits": 0, "engine_cache_misses": 0,
         }
         self._engine_keys: set = set()
-        self.result = self._cold(self.delta.graph())
-        self.colors = self.result.colors
 
     # -- engine plumbing -----------------------------------------------------
     def _cold(self, g: CSRGraph) -> ColoringResult:
@@ -188,6 +241,18 @@ class ColoringSession:
         ``(src, dst)`` array pairs; no-op entries (inserting an existing
         edge, deleting a missing one) dirty nothing.
         """
+        if self._journal is not None:
+            # write-ahead (§17): the journal records the INTENT before the
+            # overlay mutates, so a crash mid-mutation replays the whole
+            # batch from the last consistent state instead of losing it
+            self._journal_append("delta", {
+                "add_vertices": int(add_vertices),
+                "add_edges": _edge_payload(add_edges),
+                "remove_edges": _edge_payload(remove_edges),
+                "remove_vertices": (
+                    None if remove_vertices is None
+                    else np.asarray(remove_vertices).astype(int).tolist()),
+            })
         with span("delta_mutation"):
             touched: list[np.ndarray] = []
             if add_vertices:
@@ -240,17 +305,48 @@ class ColoringSession:
             else:
                 result = self._recolor_frontier(frontier)
         if not result.converged:
-            raise RuntimeError(
-                "recolor() hit max_iters before converging; the session "
-                "coloring was NOT updated — retry with a larger max_iters, "
-                "tail_serial enabled, or recolor(full=True)")
+            if self._on_fail == "ladder":
+                result = self._escalate(result, full)
+            else:
+                raise RuntimeError(
+                    "recolor() hit max_iters before converging; the session "
+                    "coloring was NOT updated — retry with a larger "
+                    "max_iters, tail_serial enabled, recolor(full=True), or "
+                    "open the session with on_fail='ladder' to escalate "
+                    "through the §17 guarantee ladder instead")
         self._counters["recolors"] += 1
         self._counters["work_total"] += int(result.work_items)
         self._counters["supersteps_total"] += int(result.iterations)
         self.colors = result.colors
         self.result = result
         self._dirty.clear()
+        if self._journal is not None:
+            # post-commit record: a crash before this line replays as "the
+            # recolor never happened", which is exactly true of the state
+            self._journal_append("recolor", {"full": bool(full)})
         return result
+
+    def _escalate(self, result, full: bool):
+        """§17 guarantee ladder for a frontier recolor that hit max_iters."""
+        from repro.core.guarantee import ensure_valid_result
+
+        g = self.delta.graph()
+
+        def rerun(rung):
+            if rung != "budget_extension":
+                # reseed would flip the session's pinned heuristic and
+                # desynchronize later frontier recolors — not applicable
+                return None
+            saved = self._max_iters
+            self._max_iters = None
+            try:
+                if full:
+                    return self._cold(g)
+                return self._recolor_frontier(self.frontier())
+            finally:
+                self._max_iters = saved
+
+        return ensure_valid_result(g, result, rerun)
 
     def _recolor_frontier(self, frontier: np.ndarray) -> ColoringResult:
         import jax.numpy as jnp
@@ -285,7 +381,7 @@ class ColoringSession:
             self._tail_serial, int(frontier.size))
         # pack_degrees needs colors < 2^15 — frozen colors included (they can
         # exceed the CURRENT dmax + 1 bound after deletions shrink the graph)
-        pack = dmax < 2**15 - 1 and int(colors0.max(initial=0)) < 2**15 - 1
+        pack = _packed_gather_ok(dmax, int(colors0.max(initial=0)))
         # engine cache accounting: everything below that feeds a jit static
         # arg or an array shape.  A key this session has already presented
         # re-enters the jit cache; a fresh one forces a trace+compile.
@@ -308,6 +404,112 @@ class ColoringSession:
             trace=self._trace,
         )
 
+    # -- durability (§17) ----------------------------------------------------
+    def _journal_append(self, kind: str, payload: dict) -> None:
+        self._journal.append(kind, payload)
+        self._records_since_snapshot += 1
+        if self._records_since_snapshot >= self._snapshot_every:
+            self.checkpoint()
+
+    def checkpoint(self) -> None:
+        """Write a full-state snapshot (DeltaCSR base + overlay, colors,
+        dirty frontier, counters, engine options) into ``durable_dir``.
+
+        Atomic (tmp + rename) and automatic every ``snapshot_every``
+        journal records; ``restore()`` resumes from the latest snapshot
+        plus the journal tail.  Raises unless the session was opened with
+        ``durable_dir=``.
+        """
+        if self._journal is None:
+            raise RuntimeError(
+                "checkpoint() needs a durable session; open it with "
+                "ColoringSession(..., durable_dir=path)")
+        arrays = dict(self.delta.state_arrays())
+        arrays["colors"] = np.asarray(self.colors, np.int32)
+        arrays["dirty"] = self.frontier()
+        meta = {
+            "counters": {k: int(v) for k, v in self._counters.items()},
+            "compactions": int(self.delta.compactions),
+            "opts": {
+                "heuristic": self._heuristic,
+                "firstfit": self._firstfit,
+                "mode": self._mode,
+                "tiling": (list(self._tiling)
+                           if isinstance(self._tiling, tuple)
+                           else self._tiling),
+                "tail_serial": self._tail_serial,
+                "max_iters": self._max_iters,
+                "compact_frac": self._compact_frac,
+                "backend": self._backend,
+                "trace": self._trace,
+                "on_fail": self._on_fail,
+                "snapshot_every": self._snapshot_every,
+            },
+        }
+        self._journal.write_snapshot(arrays, meta)
+        self._records_since_snapshot = 0
+
+    @classmethod
+    def restore(cls, durable_dir: str) -> "ColoringSession":
+        """Resume a crashed (or closed) durable session, bit-identically.
+
+        Loads the latest snapshot under ``durable_dir`` and replays every
+        CRC-valid journal record after it through the normal
+        ``apply_delta``/``recolor`` paths — the engines are deterministic,
+        so the resulting colors match the uninterrupted session exactly.
+        A torn journal tail (crash mid-write) stops the replay at the last
+        good record; ``session.recovery`` reports the snapshot seq, the
+        number of records replayed, and whether a truncated tail was
+        dropped.
+        """
+        from repro.dynamic.delta import DeltaCSR
+        from repro.dynamic.journal import SessionJournal
+
+        journal = SessionJournal(durable_dir)
+        snap = journal.load_snapshot()
+        if snap is None:
+            raise FileNotFoundError(
+                f"no snapshot under {durable_dir!r}; restore() needs a "
+                "session that was opened with durable_dir= (the opening "
+                "checkpoint is written automatically)")
+        arrays, meta = snap
+        self = cls.__new__(cls)
+        self.ingest_report = None
+        opts = dict(meta["opts"])
+        self._configure(**opts)
+        self.delta = DeltaCSR.from_state(
+            arrays, compact_frac=opts["compact_frac"],
+            compactions=meta.get("compactions", 0))
+        self._counters = dict(meta["counters"])
+        self.colors = np.asarray(arrays["colors"], np.int32)
+        self.result = ColoringResult(
+            self.colors.copy(), 0, 0, 0, True, "dynamic_sgr_restored")
+        dirty = np.asarray(arrays["dirty"], np.int64)
+        self._dirty = [dirty] if dirty.size else []
+        # replay with journaling off (_configure left _journal=None): the
+        # records being replayed are already on disk
+        replayed = 0
+        for rec in journal.records(after_seq=int(meta["seq"])):
+            p = rec["payload"]
+            if rec["kind"] == "delta":
+                self.apply_delta(
+                    add_vertices=p.get("add_vertices") or 0,
+                    add_edges=_payload_edges(p.get("add_edges")),
+                    remove_edges=_payload_edges(p.get("remove_edges")),
+                    remove_vertices=p.get("remove_vertices"),
+                )
+            elif rec["kind"] == "recolor":
+                self.recolor(full=bool(p.get("full")))
+            replayed += 1
+        self._journal = journal
+        self._records_since_snapshot = replayed
+        self.recovery = {
+            "snapshot_seq": int(meta["seq"]),
+            "replayed": replayed,
+            "truncated": bool(getattr(journal, "truncated", False)),
+        }
+        return self
+
     # -- observability -------------------------------------------------------
     def metrics(self) -> dict:
         """Cumulative session counters (DESIGN.md §16).
@@ -327,6 +529,9 @@ class ColoringSession:
         out["n"] = int(self.n)
         out["num_colors"] = self.num_colors
         out["pending_frontier"] = int(self.frontier().size)
+        if self._journal is not None:
+            out["journal_seq"] = int(self._journal.seq)
+            out["records_since_snapshot"] = int(self._records_since_snapshot)
         return out
 
 

@@ -288,8 +288,14 @@ def test_compress_accepts_dense_and_coo():
 
 def test_compress_refuses_unconverged_partition():
     bg = jacobian_band(40, band=2)
+    # on_fail="raise" keeps the pre-§17 refuse-with-ValueError contract
     with pytest.raises(ValueError, match="did not converge"):
-        compress_jacobian_pattern(bg, max_iters=1)
+        compress_jacobian_pattern(bg, max_iters=1, on_fail="raise")
+    # the default routes the same starved run through the §17 guarantee
+    # ladder: a valid partition comes back, flagged on the degradations ledger
+    cr = compress_jacobian_pattern(bg, max_iters=1)
+    assert validate_bipartite(bg, cr.coloring.colors)
+    assert any(d.get("stage") == "ladder" for d in cr.coloring.degradations)
 
 
 def test_bipartite_empty():

@@ -199,3 +199,68 @@ def test_backend_option_surface():
     # auto resolves to a concrete backend on any platform
     r = color_data_driven(g, backend="auto")
     assert is_valid_coloring(g, r.colors)
+
+
+# --------------------------------------------------------------------------
+# §17 malformed-CSR corpus through the matrix (the ingest front door is the
+# only thing standing between these inputs and silent garbage colorings)
+# --------------------------------------------------------------------------
+
+from repro import api  # noqa: E402
+from repro.faultlab import ADVERSARIAL_GRAPHS  # noqa: E402
+from repro.ingest import IngestError, sanitize_csr  # noqa: E402
+
+MALFORMED = [k for k in ADVERSARIAL_GRAPHS if k != "empty"]
+INGEST_ENGINES = ("classic", "ragged", "sharded", "dynamic-full")
+
+
+@pytest.mark.parametrize("name", MALFORMED)
+def test_malformed_strict_raises_structured(name):
+    off, col = ADVERSARIAL_GRAPHS[name]
+    with pytest.raises(IngestError) as ei:
+        sanitize_csr(off.copy(), col.copy(), policy="strict")
+    assert ei.value.report.issues, name
+    assert not ei.value.report.ok
+    # and through the api front door on a constructible CSRGraph
+    g = CSRGraph(off.copy(), col.copy())
+    with pytest.raises(IngestError):
+        api.color(g, validate_input="strict")
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("engine", INGEST_ENGINES)
+@pytest.mark.parametrize("name", list(ADVERSARIAL_GRAPHS))
+def test_malformed_repair_bit_identical_to_clean(name, engine, backend):
+    """repair-mode coloring of a dirty CSR == coloring its sanitized twin,
+    bit for bit, on every engine × backend — the repair path may not perturb
+    the deterministic schedule."""
+    off, col = ADVERSARIAL_GRAPHS[name]
+    clean, report = sanitize_csr(off.copy(), col.copy(), policy="repair")
+    dirty = CSRGraph(off.copy(), col.copy())
+    if engine == "dynamic-full":
+        s_dirty = open_session(dirty, backend=backend,
+                               validate_input="repair")
+        s_clean = open_session(clean, backend=backend)
+        r_dirty, r_clean = s_dirty.result, s_clean.result
+        gv = s_dirty.graph
+    else:
+        r_dirty = api.color(dirty, validate_input="repair", engine=engine,
+                            backend=backend)
+        r_clean = api.color(clean, engine=engine, backend=backend)
+        gv = clean
+    np.testing.assert_array_equal(r_dirty.colors, r_clean.colors)
+    assert is_valid_coloring(gv, r_dirty.colors), (name, engine, backend)
+    if name != "empty":
+        assert report.repairs, name  # something was actually repaired
+
+
+@pytest.mark.parametrize("name", list(ADVERSARIAL_GRAPHS))
+def test_malformed_repair_records_degradations(name):
+    off, col = ADVERSARIAL_GRAPHS[name]
+    g = CSRGraph(off.copy(), col.copy())
+    r = api.color(g, validate_input="repair")
+    stages = {d["stage"] for d in r.degradations}
+    if name == "empty":
+        assert r.degradations == ()
+    else:
+        assert stages == {"ingest_repair"}, (name, r.degradations)

@@ -1,0 +1,216 @@
+"""§17 fault-injection matrix: every detector fires, every recovery heals.
+
+Four injected fault families (``repro.faultlab``), each asserted twice —
+once that the corruption is *detected* (never silently accepted) and once
+that the §17 recovery path (guarantee ladder, journal replay, full
+recolor) restores a valid state.
+"""
+import numpy as np
+import pytest
+
+from repro import faultlab
+from repro.api import color, open_session
+from repro.core import csr_from_edges, is_valid_coloring
+from repro.core.guarantee import residual_vertices, serial_repair
+from repro.ingest import check_halo_words, pack_halo_words
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(11)
+    n = 300
+    return csr_from_edges(n, rng.integers(0, n, 2200),
+                          rng.integers(0, n, 2200))
+
+
+# --------------------------------------------------------------------------
+# fault 1: colors corrupted between engine and commit
+# --------------------------------------------------------------------------
+
+def test_corrupt_colors_is_detected(graph):
+    with faultlab.corrupt_colors(fraction=0.05, seed=3):
+        r = color(graph, "data_driven")
+    assert not is_valid_coloring(graph, r.colors)  # detector fires
+
+
+def test_corrupt_colors_recovered_by_ladder(graph):
+    with faultlab.corrupt_colors(fraction=0.05, seed=3):
+        r = color(graph, "data_driven", ensure_valid=True)
+    assert r.converged
+    assert is_valid_coloring(graph, r.colors)
+    rungs = [d["rung"] for d in r.degradations if d["stage"] == "ladder"]
+    assert rungs, r.degradations  # the escalation is on the ledger
+
+
+def test_corrupt_colors_restores_registry(graph):
+    with faultlab.corrupt_colors():
+        pass
+    r = color(graph, "data_driven")
+    assert is_valid_coloring(graph, r.colors)  # patching fully undone
+
+
+def test_corrupt_session_colors_full_recolor_heals(graph):
+    s = open_session(graph)
+    assert s.validate()
+    # fault lands directly on the committed colors (device-memory model)
+    s.colors = faultlab._corrupt(s.graph, s.colors, 0.05, seed=1)
+    assert not s.validate()                  # detector
+    s.recolor(full=True)
+    assert s.validate()                      # recovery
+
+
+def test_serial_repair_survives_garbage_colors(graph):
+    # even colors far outside any legal range must not break the repair
+    rng = np.random.default_rng(0)
+    colors = rng.integers(-5, 10**6, graph.n).astype(np.int32)
+    colors[:10] = 0           # uncolored
+    colors[10:20] = -3        # negative garbage
+    residual = residual_vertices(graph, colors)
+    out = serial_repair(graph, colors, np.arange(graph.n), order="oracle")
+    assert is_valid_coloring(graph, out)
+    assert residual.size >= 20  # the planted defects are all caught
+
+
+# --------------------------------------------------------------------------
+# fault 2: poisoned packed halo words
+# --------------------------------------------------------------------------
+
+def test_poisoned_halo_words_detected():
+    n = 200
+    rng = np.random.default_rng(4)
+    ids = rng.integers(0, n, 64)
+    colors = rng.integers(1, 12, 64)
+    words = pack_halo_words(ids, colors)
+    assert check_halo_words(words, n).size == 0      # clean words pass
+    poisoned = faultlab.poison_halo_words(words, n, fraction=0.25, seed=9)
+    bad = check_halo_words(poisoned, n)
+    changed = np.nonzero(poisoned != words)[0]
+    assert changed.size > 0
+    assert set(changed) <= set(bad.tolist())         # every poison detected
+
+
+def test_poison_covers_all_flavors():
+    words = pack_halo_words(np.zeros(30, np.int64), np.ones(30, np.int64))
+    poisoned = faultlab.poison_halo_words(words, 30, fraction=1.0, seed=0)
+    assert (poisoned < 0).any()                      # negative word
+    ids = (poisoned.astype(np.int64) >> 16)
+    assert (ids > 30).any()                          # out-of-range id
+    cols = poisoned & 0xFFFF
+    assert ((poisoned >= 0) & (cols > 30)).any()     # impossible color
+
+
+# --------------------------------------------------------------------------
+# fault 3: torn / corrupted write-ahead journal
+# --------------------------------------------------------------------------
+
+def _churn(s, n, seed, rounds=6):
+    rng = np.random.default_rng(seed)
+    for i in range(rounds):
+        k = max(1, n // 100)  # ~1% churn per round
+        s.apply_delta(add_edges=(rng.integers(0, n, k),
+                                 rng.integers(0, n, k)))
+        if i % 2:
+            s.apply_delta(remove_edges=(rng.integers(0, n, k // 2 + 1),
+                                        rng.integers(0, n, k // 2 + 1)))
+        s.recolor()
+
+
+def test_checkpoint_kill_restore_bit_identical(graph, tmp_path):
+    """The §17 acceptance scenario: durable session under 1% churn, killed,
+    restored — colors, counters, and future behavior all bit-identical to
+    the uninterrupted twin."""
+    ref = open_session(graph)
+    dur = open_session(graph, durable_dir=str(tmp_path), snapshot_every=5)
+    _churn(ref, graph.n, 21)
+    _churn(dur, graph.n, 21)
+    del dur                                   # the "kill"
+    from repro.dynamic.session import ColoringSession
+
+    rest = ColoringSession.restore(str(tmp_path))
+    assert rest.recovery is not None and not rest.recovery["truncated"]
+    np.testing.assert_array_equal(ref.colors, rest.colors)
+    assert rest.validate()
+    # post-restore lockstep: the restored session behaves like the original
+    _churn(ref, graph.n, 33)
+    _churn(rest, graph.n, 33)
+    np.testing.assert_array_equal(ref.colors, rest.colors)
+    assert rest.metrics()["recolors"] == ref.metrics()["recolors"]
+
+
+@pytest.mark.parametrize("mode", ["tear", "garbage"])
+def test_truncated_journal_detected_and_recovered(graph, tmp_path, mode):
+    s = open_session(graph, durable_dir=str(tmp_path), snapshot_every=1000)
+    _churn(s, graph.n, 5, rounds=4)
+    del s
+    faultlab.truncate_journal(str(tmp_path), mode=mode)
+    from repro.dynamic.session import ColoringSession
+
+    rest = ColoringSession.restore(str(tmp_path))
+    assert rest.recovery["truncated"]         # detector fires
+    assert rest.validate()                    # last consistent state is valid
+    rest.apply_delta(add_edges=(np.array([0]), np.array([1])))
+    rest.recolor()                            # and the session keeps working
+    assert rest.validate()
+
+
+def test_dropped_tail_replays_clean_prefix(graph, tmp_path):
+    s = open_session(graph, durable_dir=str(tmp_path), snapshot_every=1000)
+    _churn(s, graph.n, 5, rounds=4)
+    total = s.metrics()["journal_seq"]
+    del s
+    faultlab.truncate_journal(str(tmp_path), mode="drop", records=2)
+    from repro.dynamic.session import ColoringSession
+
+    rest = ColoringSession.restore(str(tmp_path))
+    # a cleanly-shortened journal is not corruption — just an earlier state
+    assert not rest.recovery["truncated"]
+    assert rest.metrics()["journal_seq"] == total - 2
+    assert rest.validate()
+
+
+# --------------------------------------------------------------------------
+# fault 4: forced non-convergence
+# --------------------------------------------------------------------------
+
+def test_starved_run_detected(graph):
+    r = color(graph, "data_driven", engine="classic",
+              **faultlab.starved_opts())
+    assert not r.converged                    # detector: honest flag
+
+
+def test_starved_run_recovered_by_ladder(graph):
+    r = color(graph, "data_driven", engine="classic", ensure_valid=True,
+              **faultlab.starved_opts())
+    assert r.converged
+    assert is_valid_coloring(graph, r.colors)
+    outcomes = {d["rung"]: d["outcome"] for d in r.degradations
+                if d["stage"] == "ladder"}
+    assert outcomes, r.degradations
+    assert any(v == "resolved" for v in outcomes.values())
+
+
+def test_starved_session_raise_vs_ladder(graph):
+    with pytest.raises(RuntimeError, match="ladder"):
+        s = open_session(graph, **faultlab.starved_opts())
+        s.apply_delta(add_edges=(np.arange(0, 100, dtype=np.int64),
+                                 np.arange(100, 200, dtype=np.int64)))
+        # a dense clique forces conflicts the starved engine cannot clear
+        k = np.arange(40)
+        src, dst = np.meshgrid(k, k)
+        s.apply_delta(add_edges=(src.ravel(), dst.ravel()))
+        s.recolor()
+    s = open_session(graph, on_fail="ladder", **faultlab.starved_opts())
+    assert s.result.converged and s.validate()
+    k = np.arange(40)
+    src, dst = np.meshgrid(k, k)
+    s.apply_delta(add_edges=(src.ravel(), dst.ravel()))
+    r = s.recolor()
+    assert r.converged and s.validate()
+    assert any(d["stage"] == "ladder" for d in r.degradations)
+
+
+def test_ladder_trace_spans_surface(graph):
+    r = color(graph, "data_driven", engine="classic", ensure_valid=True,
+              trace=True, **faultlab.starved_opts())
+    names = [s.name for s in r.trace.spans]
+    assert "guarantee_ladder" in names

@@ -1,0 +1,265 @@
+"""§17 ingest front door: defect detection, repair, capacity budgets.
+
+The capacity boundary tests pin the exact bit budgets of the two packed
+fast paths — 2^15 − 1 / 2^15 / 2^16 — because both failure modes are
+silent without the guards: an id at 2^15 flips the halo word's sign bit,
+a degree at 2^15 walks the packed gather's color field into the degree
+field.
+"""
+import numpy as np
+import pytest
+
+from repro.api import color
+from repro.core import CSRGraph, csr_from_edges, is_valid_coloring
+from repro.core.coloring import run_ragged_engine
+from repro.core.distributed import _build_step
+from repro.ingest import (
+    INDEX_MAX,
+    PACKED_GATHER_MAX_DEG,
+    PACKED_HALO_MAX_N,
+    IngestError,
+    check_halo_words,
+    pack_halo_words,
+    packed_gather_ok,
+    packed_halo_ok,
+    sanitize_csr,
+    unpack_halo_words,
+)
+
+
+def _dirty(offsets, cols):
+    return np.asarray(offsets, np.int64), np.asarray(cols, np.int32)
+
+
+# --------------------------------------------------------------------------
+# detection + strict policy
+# --------------------------------------------------------------------------
+
+def test_clean_graph_passes_unchanged():
+    rng = np.random.default_rng(0)
+    g = csr_from_edges(40, rng.integers(0, 40, 200), rng.integers(0, 40, 200))
+    out, report = sanitize_csr(g, policy="strict")
+    assert out is g  # identity: no copy on the clean fast path
+    assert report.ok
+    assert report.degradations() == ()
+    assert "clean" in report.summary()
+
+
+def test_empty_graph_is_clean():
+    out, report = sanitize_csr(*_dirty([0], []), policy="strict")
+    assert report.ok and out.n == 0 and out.m == 0
+
+
+@pytest.mark.parametrize("offsets,cols,issue", [
+    ([0, 1, 1, 1], [1], "asymmetric"),
+    ([0, 2, 3], [0, 1, 0], "self_loop"),
+    ([0, 2, 3], [1, 1, 0], "duplicate_edge"),
+    ([0, 2, 3], [-1, 1, 0], "col_negative"),
+    ([0, 2, 3], [1, 5, 0], "col_out_of_range"),
+    ([0, 2, 4, 6], [1, 2, 2, 0, 0, 1], "row_unsorted"),
+    ([0, 2, 1, 3], [1, 2, 0], "indptr_nonmonotone"),
+    ([1, 2, 3], [1, 0], "indptr_first_nonzero"),
+    ([0, 1, 5], [1, 0], "indptr_last_mismatch"),
+])
+def test_each_defect_detected_and_strict_raises(offsets, cols, issue):
+    with pytest.raises(IngestError) as ei:
+        sanitize_csr(*_dirty(offsets, cols), policy="strict")
+    assert issue in ei.value.report.issues, ei.value.report.issues
+    assert issue in ei.value.report.summary() or not ei.value.report.ok
+
+
+def test_strict_report_is_structured():
+    with pytest.raises(IngestError) as ei:
+        sanitize_csr(*_dirty([0, 2, 3], [0, 1, 0]), policy="strict")
+    rep = ei.value.report
+    assert rep.policy == "strict" and rep.n == 2 and rep.m == 3
+    assert rep.repairs == ()  # strict never repairs
+
+
+def test_bad_shapes_and_dtypes_always_raise():
+    with pytest.raises(IngestError):
+        sanitize_csr(np.zeros((2, 2), np.int64), np.zeros(0, np.int32))
+    with pytest.raises(IngestError):
+        sanitize_csr(np.array([0.0, 1.0]), np.array([0.5]))
+
+
+# --------------------------------------------------------------------------
+# repair policy
+# --------------------------------------------------------------------------
+
+def test_repair_symmetrizes():
+    g, rep = sanitize_csr(*_dirty([0, 1, 1, 1], [1]), policy="repair")
+    assert ("symmetrized", 1) in rep.repairs
+    assert g.n == 3 and g.m == 2  # 0-1 both directions
+    assert list(g.neighbors(1)) == [0]
+
+
+def test_repair_strips_loops_dedups_sorts():
+    g, rep = sanitize_csr(
+        *_dirty([0, 3, 5, 6], [1, 1, 0, 0, 0, 1]), policy="repair")
+    actions = dict(rep.repairs)
+    assert "stripped_self_loops" in actions
+    assert "deduplicated" in actions
+    for v in range(g.n):
+        nb = g.neighbors(v)
+        assert (np.diff(nb) > 0).all()  # sorted, no dups
+        assert v not in nb              # no self loops
+
+
+def test_repair_drops_bad_indices_keeps_rest():
+    g, rep = sanitize_csr(
+        *_dirty([0, 3, 4], [-1, 1, 9, 0]), policy="repair")
+    assert ("dropped_out_of_range", 2) in rep.repairs
+    assert g.n == 2 and g.m == 2  # surviving 0-1 edge, symmetric
+
+
+def test_repair_rebuilds_broken_indptr():
+    g, rep = sanitize_csr(*_dirty([0, 2, 1, 3], [1, 2, 0]), policy="repair")
+    assert any(a == "rebuilt_indptr" for a, _ in rep.repairs)
+    assert (np.diff(g.row_offsets) >= 0).all()
+    out, rep2 = sanitize_csr(g, policy="strict")  # repaired output is clean
+    assert rep2.ok
+
+
+def test_repair_output_always_revalidates():
+    rng = np.random.default_rng(5)
+    for _ in range(10):
+        n = int(rng.integers(2, 12))
+        m = int(rng.integers(0, 20))
+        counts = rng.multinomial(m, np.ones(n) / n)
+        offsets = np.zeros(n + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        cols = rng.integers(-2, n + 2, m)
+        g, _ = sanitize_csr(offsets, cols.astype(np.int32), policy="repair")
+        _, rep = sanitize_csr(g, policy="strict")
+        assert rep.ok
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown policy"):
+        sanitize_csr(*_dirty([0], []), policy="lenient")
+
+
+def test_index_capacity_guard_on_vertex_growth():
+    # materializing 2^31 offsets is not viable in CI; the int32 index-space
+    # ceiling is exercised where it can actually be crossed — vertex growth
+    from repro.dynamic.delta import DeltaCSR
+
+    assert INDEX_MAX == 2**31 - 1
+    d = DeltaCSR.from_edges(2, np.array([0]), np.array([1]))
+    with pytest.raises(ValueError, match="int32"):
+        d.add_vertices(INDEX_MAX)
+
+
+# --------------------------------------------------------------------------
+# packed-word capacity boundaries: 2^15 − 1 / 2^15 / 2^16 exactly
+# --------------------------------------------------------------------------
+
+def test_packed_halo_boundary():
+    assert packed_halo_ok(PACKED_HALO_MAX_N - 1)        # 2^15 - 1: last good
+    assert not packed_halo_ok(PACKED_HALO_MAX_N)        # 2^15: sign-bit flip
+    assert not packed_halo_ok(2**16)                    # far side
+    assert not packed_halo_ok(-1)
+
+
+def test_packed_gather_boundary():
+    assert packed_gather_ok(PACKED_GATHER_MAX_DEG - 1)  # 2^15 - 2: last good
+    assert not packed_gather_ok(PACKED_GATHER_MAX_DEG)  # 2^15 - 1: deg + 1
+    assert not packed_gather_ok(2**15)
+    assert not packed_gather_ok(2**16)
+    assert not packed_gather_ok(-1)
+    # color bound is checked with the same margin
+    assert packed_gather_ok(4, color_bound=PACKED_GATHER_MAX_DEG - 1)
+    assert not packed_gather_ok(4, color_bound=PACKED_GATHER_MAX_DEG)
+    assert not packed_gather_ok(4, color_bound=2**16)
+
+
+def test_halo_word_roundtrip_at_capacity():
+    ids = np.array([0, 1, PACKED_HALO_MAX_N - 1], np.int64)
+    colors = np.array([0, 7, PACKED_HALO_MAX_N - 1], np.int64)
+    back_ids, back_colors = unpack_halo_words(pack_halo_words(ids, colors))
+    np.testing.assert_array_equal(back_ids, ids)
+    np.testing.assert_array_equal(back_colors, colors)
+
+
+def test_halo_word_corrupts_past_capacity():
+    # the reason the guard exists: id = 2^15 flips the int32 sign bit
+    words = pack_halo_words(np.array([2**15]), np.array([1]))
+    assert words[0] < 0
+    bad = check_halo_words(words, n=2**15 + 10)
+    assert bad.size == 1
+
+
+def test_ragged_engine_refuses_packed_overflow():
+    with pytest.raises(ValueError, match="pack_degrees"):
+        run_ragged_engine(
+            n=4, provider=None, deg_ext=None, classes=[], tile_widths=[],
+            acc_widths=[], tail_width=PACKED_GATHER_MAX_DEG,
+            max_iters=4, pack_degrees=True)
+
+
+def test_sharded_step_refuses_packed_halo_overflow():
+    with pytest.raises(ValueError, match="halo"):
+        _build_step(
+            None, provider_kind="csr", n=PACKED_HALO_MAX_N, n_loc=8,
+            tile_widths=(4,), heuristic="degree", kind="bitset",
+            pack_degrees=False, pack_halo=True)
+
+
+def test_engine_falls_back_unpacked_above_budget(monkeypatch):
+    """Force the capacity predicate to answer False: the dispatch must pick
+    the unpacked path and still produce a valid (identical) coloring."""
+    import repro.core.coloring as C
+
+    g = csr_from_edges(30, np.arange(29, dtype=np.int64),
+                       np.arange(1, 30, dtype=np.int64))
+    ref = color(g, "data_driven", engine="ragged")
+    monkeypatch.setattr(C, "_packed_gather_ok", lambda d, c=None: False)
+    out = color(g, "data_driven", engine="ragged")
+    np.testing.assert_array_equal(ref.colors, out.colors)
+    assert is_valid_coloring(g, out.colors)
+
+
+# --------------------------------------------------------------------------
+# api wiring
+# --------------------------------------------------------------------------
+
+def test_color_validate_input_strict_and_repair():
+    bad = CSRGraph(np.array([0, 1, 1, 1], np.int64), np.array([1], np.int32))
+    with pytest.raises(IngestError):
+        color(bad, validate_input="strict")
+    r = color(bad, validate_input="repair")
+    assert any(d["stage"] == "ingest_repair" for d in r.degradations)
+    assert r.converged
+
+
+def test_color_validate_input_rejects_non_csr():
+    with pytest.raises(TypeError, match="CSRGraph"):
+        color(object(), validate_input="strict")
+
+
+def test_batch_and_partition_validate_input():
+    from repro.core.batch import GraphBatch
+    from repro.core.csr import PartitionedCSR
+
+    bad = CSRGraph(np.array([0, 1, 1, 1], np.int64), np.array([1], np.int32))
+    with pytest.raises(IngestError):
+        GraphBatch.from_graphs([bad], validate_input="strict")
+    batch = GraphBatch.from_graphs([bad], validate_input="repair")
+    assert batch.B == 1
+    with pytest.raises(IngestError):
+        PartitionedCSR.from_graph(bad, 2, validate_input="strict")
+    part = PartitionedCSR.from_graph(bad, 2, validate_input="repair")
+    assert part.n == 3
+
+
+def test_delta_csr_validate_input():
+    from repro.dynamic.delta import DeltaCSR
+
+    bad = CSRGraph(np.array([0, 1, 1, 1], np.int64), np.array([1], np.int32))
+    d = DeltaCSR(bad, validate_input="repair")
+    assert d.ingest_report is not None and d.ingest_report.repairs
+    _, rep = sanitize_csr(d.graph(), policy="strict")
+    assert rep.ok
+    with pytest.raises(IngestError):
+        DeltaCSR(bad, validate_input="strict")

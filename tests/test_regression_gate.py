@@ -272,6 +272,59 @@ def test_schema6_baseline_roundtrip():
     assert fails == []
 
 
+def test_unexpected_degradations_fail():
+    """§17 acceptance: an injected degradation entry flips the gate."""
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["degradations"] = [
+        {"stage": "ladder", "rung": "budget_extension",
+         "outcome": "resolved"}]
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("unexpected degradations ['ladder']" in f for f in fails)
+    # dynamic and bipartite records are gated identically
+    doc = _schema6_doc()
+    doc["dynamic"]["rmat-g"]["degradations"] = [
+        {"stage": "ingest_repair", "action": "symmetrized", "count": 2}]
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("unexpected degradations ['ingest_repair']" in f
+               for f in fails)
+    doc = _schema6_doc()
+    doc["bipartite"]["banded_b2"]["degradations"] = [{"stage": "ladder"}]
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert any("banded_b2: unexpected degradations" in f for f in fails)
+
+
+def test_allowed_degradations_whitelist():
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["degradations"] = [
+        {"stage": "ingest_repair", "action": "deduplicated", "count": 1}]
+    base = copy.deepcopy(SCHEMA6_BASELINE)
+    base["algorithms"]["fused"]["rmat-g"]["allowed_degradations"] = [
+        "ingest_repair"]
+    fails, _ = check(doc, base)
+    assert fails == []
+    # the whitelist is per-stage: a ladder escalation still fails
+    doc["algorithms"]["fused"]["rmat-g"]["degradations"].append(
+        {"stage": "ladder", "rung": "serial_oracle", "outcome": "resolved"})
+    fails, _ = check(doc, base)
+    assert any("unexpected degradations ['ladder']" in f for f in fails)
+    # empty list is the healthy case, never a failure
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["degradations"] = []
+    fails, _ = check(doc, SCHEMA6_BASELINE)
+    assert fails == []
+
+
+def test_write_baseline_accepts_current_degradations():
+    doc = _schema6_doc()
+    doc["algorithms"]["fused"]["rmat-g"]["degradations"] = [
+        {"stage": "ingest_repair", "action": "sorted_rows", "count": 3}]
+    base = make_baseline([doc])
+    assert base["algorithms"]["fused"]["rmat-g"][
+        "allowed_degradations"] == ["ingest_repair"]
+    fails, _ = check(doc, base)
+    assert fails == []
+
+
 def test_main_exit_codes_and_baseline_roundtrip(tmp_path):
     doc_path = tmp_path / "bench.json"
     base_path = tmp_path / "baseline.json"
