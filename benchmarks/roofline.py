@@ -13,10 +13,16 @@ bytes/s vs the platform peak.  Bytes per gather cell:
   packed (``pack_degrees`` on, the default): 4B neighbor id + 4B packed
       ``color | degree << 16`` word                            =  8 B/cell
   split (packing gated off): 4B id + 4B color + 4B degree      = 12 B/cell
+  pallas (gathered-tile kernel): the split tiles are materialized in HBM
+      by the host-side gather AND read back by the kernel     = 24 B/cell
+  csr (CSR-resident kernel, §18): the kernel gathers id + packed word
+      straight from R/C into VMEM — no intermediate tile      =  8 B/cell
 
 This replaces the previous drift where the file carried only LM-training
 constants and nothing fed from the coloring engines; ``benchmarks/run.py
---backend pallas`` embeds the model's output in BENCH schema-5 records.
+--backend pallas`` embeds the model's output in BENCH schema-5 records,
+and schema-8 records carry the per-class ``bytes_per_cell`` so the
+pallas vs pallas-csr delta is visible per degree class.
 
 **Dry-run table** — three terms per (arch x shape x mesh) cell, in seconds
 per step, from the trip-count-corrected HLO analysis
@@ -38,21 +44,34 @@ ICI_BW = 50e9              # bytes/s per link (TPU v5e)
 
 CHIPS = {"single": 256, "pod": 512}
 
-# bytes one gather cell moves through the rotated super-step (§12/§15)
+# bytes one gather cell moves through the rotated super-step (§12/§15/§18)
 BYTES_PER_CELL_PACKED = 8    # neighbor id + packed color|deg<<16 word
 BYTES_PER_CELL_SPLIT = 12    # neighbor id + color + degree, separately
+# the gathered-tile Pallas path materializes the three split tiles in HBM
+# (host-side gather writes them) and the kernel reads them back: 2x split
+BYTES_PER_CELL_PALLAS = 2 * BYTES_PER_CELL_SPLIT
+# the CSR-resident kernel (§18) reads id + packed word once, from R/C
+BYTES_PER_CELL_CSR = 8
+
+_MODE_BYTES = {
+    "packed": BYTES_PER_CELL_PACKED,
+    "split": BYTES_PER_CELL_SPLIT,
+    "pallas": BYTES_PER_CELL_PALLAS,
+    "csr": BYTES_PER_CELL_CSR,
+}
 
 # peak HBM bytes/s per platform; None = unknown (no frac_of_peak reported)
 PEAK_BYTES_PER_S = {"tpu_v5e": HBM_BW, "tpu": HBM_BW, "cpu": None}
 
 __all__ = ["roofline_terms", "coloring_roofline", "load_table",
            "format_table", "main", "BYTES_PER_CELL_PACKED",
-           "BYTES_PER_CELL_SPLIT", "PEAK_BYTES_PER_S"]
+           "BYTES_PER_CELL_SPLIT", "BYTES_PER_CELL_PALLAS",
+           "BYTES_PER_CELL_CSR", "PEAK_BYTES_PER_S"]
 
 
 def coloring_roofline(result, seconds: float | None = None, *,
                       peak_bytes_per_s: float | None = None,
-                      packed: bool = True) -> dict:
+                      packed: bool = True, mode: str | None = None) -> dict:
     """Per-degree-class bytes-moved model from ``ColoringResult`` counters.
 
     ``result`` needs only ``class_cells`` (and is duck-typed so benchmark
@@ -60,18 +79,28 @@ def coloring_roofline(result, seconds: float | None = None, *,
     wall-clock of the run; when given, each class reports its achieved
     bytes/s contribution and the document carries the total achieved vs
     ``peak_bytes_per_s`` (``frac_of_peak``; omitted when the peak is
-    unknown, e.g. CPU).  ``packed`` mirrors the engine's ``pack_degrees``
-    gate (split gathers move 12 B/cell instead of 8).
+    unknown, e.g. CPU).  ``mode`` picks the traffic model per cell —
+    ``"packed"`` / ``"split"`` (pure JAX), ``"pallas"`` (gathered-tile
+    kernel: the split tiles are written to HBM and read back, 2x split) or
+    ``"csr"`` (CSR-resident kernel, one id + packed-word read).  ``None``
+    defers to the legacy ``packed`` flag.
     """
-    per_cell = BYTES_PER_CELL_PACKED if packed else BYTES_PER_CELL_SPLIT
+    if mode is None:
+        mode = "packed" if packed else "split"
+    if mode not in _MODE_BYTES:
+        raise ValueError(
+            f"unknown roofline mode {mode!r}; options: {', '.join(_MODE_BYTES)}")
+    per_cell = _MODE_BYTES[mode]
     class_cells = tuple(getattr(result, "class_cells", result))
     classes = []
     for width, cells in class_cells:
         entry = {"width": int(width), "cells": int(cells),
+                 "bytes_per_cell": per_cell,
                  "bytes": int(cells) * per_cell}
         classes.append(entry)
     total = sum(c["bytes"] for c in classes)
     out = {
+        "mode": mode,
         "bytes_per_cell": per_cell,
         "bytes_total": total,
         "classes": classes,

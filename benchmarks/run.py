@@ -56,6 +56,17 @@ glob picks it up); ``python -m repro.obs.report <either file>`` re-renders
 both.  ``benchmarks/check_regression.py`` gates the new sections: missing
 trace, superstep-count regressions, earlier tail triggers, broken row
 invariants, and dynamic jit-miss growth all fail CI.
+
+Schema 8 adds ``--backend pallas-csr`` (§18, the CSR-resident fused
+kernel) and an honest per-backend roofline traffic model: the legacy
+``pallas`` backend is charged its REAL traffic — the host-side gather
+materializes split-size tiles in HBM and the kernel reads them back
+(24 B/cell) — while ``pallas-csr`` gathers id + packed word straight
+from the CSR arrays (8 B/cell).  Every roofline class entry now carries
+its own ``bytes_per_cell`` and the section a ``mode`` field, so the
+pallas vs pallas-csr delta is visible per degree class.  Colors stay
+bit-identical across all backends; CI's artifact is
+``BENCH_coloring_pallas_csr.json``, gated against the same baseline.
 """
 from __future__ import annotations
 
@@ -94,7 +105,12 @@ def _engine_opts(alg: str, engine: str) -> dict:
 
 # algorithms that accept the §15 backend= knob (kernel vs pure-JAX superstep)
 BACKEND_ALGS = ("data_driven", "fused", "distance2", "dynamic")
-BACKENDS = ("jax", "pallas")
+BACKENDS = ("jax", "pallas", "pallas-csr")
+
+# roofline traffic model per backend (schema 8): the gathered-tile pallas
+# path materializes split tiles in HBM and reads them back; the CSR kernel
+# reads id + packed word once from R/C; pure JAX uses the packed gather
+_ROOFLINE_MODE = {"pallas": "pallas", "pallas-csr": "csr"}
 
 
 def _backend_opts(alg: str, backend: str) -> dict:
@@ -115,7 +131,7 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
     graphs = {name: build_graph(name, json_scale) for name in JSON_GRAPHS}
     doc = {
-        "schema": 7,
+        "schema": 8,
         "scale": json_scale,
         "engine": engine,
         "backend": backend,
@@ -155,10 +171,8 @@ def bench_coloring_json(path: str = JSON_PATH, engine: str = "ragged",
                                  getattr(r, "degradations", ())],
             }
             if getattr(r, "class_cells", ()):
-                # the kernel path gathers colors/degrees separately (no
-                # pack_degrees fusion), so it moves split-size cells
                 rec["roofline"] = coloring_roofline(
-                    r, seconds, packed=(backend != "pallas"))
+                    r, seconds, mode=_ROOFLINE_MODE.get(backend, "packed"))
             if alg in BACKEND_ALGS:
                 # one extra UNTIMED traced call (schema 6): the timed
                 # numbers above stay on the untraced zero-cost path
@@ -215,7 +229,7 @@ def bench_dynamic_json_doc(path: str = JSON_PATH,
     json_scale = float(os.environ.get("REPRO_BENCH_JSON_SCALE", "0.02"))
     records, runs = bench_dynamic_json(json_scale, backend=backend)
     doc = {
-        "schema": 7,
+        "schema": 8,
         "scale": json_scale,
         "engine": "dynamic",
         "backend": backend,

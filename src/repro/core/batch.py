@@ -304,8 +304,11 @@ def color_batch_fused(
     from repro.kernels.dispatch import resolve_backend
 
     # resolve once; recursion below passes the resolved knob (idempotent:
-    # resolve_backend(None, use_kernel=True) -> "pallas")
-    use_kernel = resolve_backend(backend, use_kernel) == "pallas"
+    # resolve_backend(None, use_kernel=True) -> "pallas").  The batch's
+    # dense stacked layout has no per-graph CSR arrays, so pallas-csr
+    # degrades to the gathered kernel (bit-identical, §18)
+    use_kernel = resolve_backend(backend, use_kernel) in (
+        "pallas", "pallas-csr")
     if isinstance(graphs, GraphBatch):
         if graphs.distance2 != distance2:
             raise ValueError(

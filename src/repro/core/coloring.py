@@ -267,7 +267,8 @@ def sgr_step(
 def ragged_superstep(rows_fn, deg_ext, colors_ext, wl, *,
                      heuristic: str = "degree", kind: str = "bitset",
                      use_kernel: bool = False, coarsen: int = 1,
-                     colors_read=None, pack_degrees: bool = False):
+                     colors_read=None, pack_degrees: bool = False,
+                     provider=None, width: int | None = None):
     """One rotated super-step: ConflictResolve + FirstFit + compaction.
 
     ``rows_fn(ids) -> (w, W)`` provides the sentinel-padded neighbor tile —
@@ -288,6 +289,14 @@ def ragged_superstep(rows_fn, deg_ext, colors_ext, wl, *,
     gather.  Callers enable it when both fields provably fit 15 bits (colors
     are bounded by the gather width + 1).  Packed or not, the arithmetic is
     exact, so results are bit-identical either way.
+
+    ``use_kernel="csr"`` (backend="pallas-csr", DESIGN.md §18) routes the
+    step through the CSR-resident fused kernel when ``provider`` is a
+    ``DeviceCSR`` and the packed word fits (``pack_degrees``): the kernel
+    gathers neighbors straight from R/C in VMEM — no ``rows_fn`` call and no
+    materialized ``(w, W)`` tile.  Configurations the CSR kernel can't serve
+    (dense providers, chunked worklists, packed overflow) fall back to the
+    gathered kernel — bit-identical by the §15 argument.
     """
     n = colors_ext.shape[0] - 1
     cap = wl.shape[0]
@@ -296,9 +305,25 @@ def ragged_superstep(rows_fn, deg_ext, colors_ext, wl, *,
     # the packed word array must track earlier chunks' writes, so a chunked
     # step would repack O(n) per chunk — fall back to separate gathers there
     pack_degrees = pack_degrees and len(chunk_bounds) == 1
+    use_csr = (use_kernel == "csr" and pack_degrees
+               and isinstance(provider, DeviceCSR))
     need_parts = []
     for lo, hi in chunk_bounds:
         ids = wl[lo:hi]
+        if use_csr:
+            from repro.kernels.superstep.csr_kernel import superstep_csr_tpu
+
+            packed = read + (deg_ext << 16)
+            new_c, need = superstep_csr_tpu(
+                provider.row_starts, provider.col_padded, packed, ids,
+                provider.max_width if width is None else width, heuristic)
+            valid = ids < n
+            need = need & valid
+            new_c = jnp.where(valid, new_c, 0).astype(colors_ext.dtype)
+            colors_ext = colors_ext.at[ids].set(new_c)
+            read = colors_ext
+            need_parts.append(need)
+            continue
         rows = rows_fn(ids)
         my_c = read[ids]
         my_d = deg_ext[ids]
@@ -458,6 +483,24 @@ def provider_tail(provider, colors_ext, wl, *, kind="bitset"):
     return serial_tail_step(provider.row1, colors_ext, wl, kind)
 
 
+def _dispatch_tail(provider, colors_ext, wl, *, kind, use_kernel, width):
+    """Route the serial tail: on-device CSR kernel vs the fori_loop driver.
+
+    ``use_kernel="csr"`` with a ``DeviceCSR`` provider runs the §18 grid=1
+    sequential kernel (one dispatch, live aliased color state); every other
+    configuration keeps the ``serial_tail_step`` fori_loop.  Both compute
+    the same sequential greedy — every FirstFit ``kind`` returns the
+    smallest free color, so the kernel is kind-agnostic and bit-identical.
+    """
+    if use_kernel == "csr" and isinstance(provider, DeviceCSR):
+        from repro.kernels.superstep.csr_kernel import serial_tail_csr_tpu
+
+        return serial_tail_csr_tpu(
+            provider.row_starts, provider.col_padded, provider.deg_ext,
+            colors_ext, wl, width)
+    return provider_tail(provider, colors_ext, wl, kind=kind)
+
+
 def _tiled_superstep(provider, deg_ext, colors_ext, wls, *, widths, heuristic,
                      kind, use_kernel, chunks, pack_degrees=False):
     """One degree-tiled super-step: every class sub-step in one computation.
@@ -477,6 +520,7 @@ def _tiled_superstep(provider, deg_ext, colors_ext, wls, *, widths, heuristic,
             coarsen=chunks[k],
             colors_read=None if K == 1 else snapshot,
             pack_degrees=pack_degrees,
+            provider=provider, width=widths[k],
         )
         new_wls.append(wl_k)
         counts.append(cnt_k)
@@ -660,8 +704,9 @@ def run_ragged_engine(
             tail_np[:total] = live
         with span("serial_tail", live=total, stalled=stalled):
             tail_wl = order_tail(jnp.asarray(tail_np), deg_ext)
-            colors_ext = provider_tail(provider, colors_ext, tail_wl,
-                                       kind=kind)
+            colors_ext = _dispatch_tail(provider, colors_ext, tail_wl,
+                                        kind=kind, use_kernel=use_kernel,
+                                        width=tail_width)
         work += n if stalled and stall_serializes_all else total
         tail_cells = int(tail_wl.shape[0]) * tail_width
         padded += tail_cells
@@ -799,8 +844,9 @@ def _run_ragged_fused(
             else:
                 combined = jnp.concatenate(list(wls)) if K > 1 else wls[0]
                 tail_wl = order_tail(combined, deg_ext)
-            colors_ext = provider_tail(provider, colors_ext, tail_wl,
-                                       kind=kind)
+            colors_ext = _dispatch_tail(provider, colors_ext, tail_wl,
+                                        kind=kind, use_kernel=use_kernel,
+                                        width=tail_width)
         work_items += n if stalled and stall_serializes_all else total
         tail_cells = int(tail_wl.shape[0]) * tail_width
         padded += tail_cells
@@ -1043,7 +1089,7 @@ def color_data_driven(
     default ``False`` dispatches the identical device programs, so untraced
     results stay bit-identical and free of overhead.
     """
-    from repro.kernels.dispatch import resolve_backend
+    from repro.kernels.dispatch import kernel_mode, resolve_backend
 
     n = g.n
     if n == 0:
@@ -1056,7 +1102,10 @@ def color_data_driven(
 
     def run(engine=engine, mode=mode, use_kernel=use_kernel):
         if engine == "classic":
-            use_kernel = resolve_backend(backend, use_kernel) == "pallas"
+            # the classic engine's two-phase kernels take dense tiles only;
+            # pallas-csr degrades to the gathered kernel (bit-identical)
+            use_kernel = resolve_backend(backend, use_kernel) in (
+                "pallas", "pallas-csr")
             return _color_classic(
                 g, heuristic, firstfit, use_kernel, coarsen_ff, coarsen_cr,
                 coarsen_lanes, buckets, mode, max_iters, reuse_rows,
@@ -1088,7 +1137,7 @@ def color_data_driven(
             # one device: the sharded schedule IS the ragged fused one — pin
             # mode so colors AND accounting are device-count-independent
             engine, mode = "ragged", "fused"
-        use_kernel = resolve_backend(backend, use_kernel) == "pallas"
+        use_kernel = kernel_mode(resolve_backend(backend, use_kernel))
         if engine not in ("ragged", "padded"):
             raise ValueError(
                 f"unknown engine {engine!r}; options: ragged, padded, "

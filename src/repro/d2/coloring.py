@@ -374,7 +374,9 @@ def color_distance2(
     elif engine != "ragged":
         raise ValueError(
             f"unknown engine {engine!r}; options: ragged, sharded")
-    use_kernel = resolve_backend(backend, use_kernel) == "pallas"
+    from repro.kernels.dispatch import kernel_mode
+
+    use_kernel = kernel_mode(resolve_backend(backend, use_kernel))
     if n == 0:
         result = ColoringResult(np.zeros(0, np.int32), 0, 0, 0, True,
                                 algorithm="distance2_sgr")

@@ -157,7 +157,7 @@ class ColoringSession:
     def _configure(self, *, heuristic, firstfit, mode, tiling, tail_serial,
                    max_iters, compact_frac, backend, trace, on_fail,
                    snapshot_every) -> None:
-        from repro.kernels.dispatch import resolve_backend
+        from repro.kernels.dispatch import kernel_mode, resolve_backend
 
         if on_fail not in ("raise", "ladder"):
             raise ValueError(
@@ -169,10 +169,11 @@ class ColoringSession:
         self._tail_serial = tail_serial
         self._max_iters = max_iters
         self._compact_frac = compact_frac
-        # §15: frontier recolors reuse the fused superstep kernel — the
-        # pow2-padded worklists below already keep its jit cache keys stable
+        # §15/§18: frontier recolors reuse the fused superstep kernels — the
+        # pow2-padded worklists below already keep their jit cache keys
+        # stable, and the session's padded DeviceCSR feeds pallas-csr
         self._backend = backend
-        self._use_kernel = resolve_backend(backend) == "pallas"
+        self._use_kernel = kernel_mode(resolve_backend(backend))
         # §16: trace knob threads to the cold and every frontier recolor
         self._trace = trace
         # §17: non-convergence policy + durability plumbing

@@ -11,15 +11,23 @@ place that policy lives:
   (``use_kernel=True`` has always meant "route through the Pallas kernels").
 * ``backend="jax"``  — force the pure-JAX engine.  Contradicting it with
   ``use_kernel=True`` raises instead of silently picking a side.
-* ``backend="pallas"`` — force the kernel path.  On non-TPU backends the
-  kernels run in ``interpret=True`` mode (see ``kernels/superstep/ops.py``),
-  slow but bit-identical — which is what the differential test matrix runs
-  in CI.
-* ``backend="auto"`` — ``pallas`` when the default JAX backend is a TPU,
-  ``jax`` otherwise (interpret mode is a debugging tool, not a fast path).
+* ``backend="pallas"`` — force the gathered-tile kernel path.  On non-TPU
+  backends the kernels run in ``interpret=True`` mode (see
+  ``kernels/superstep/ops.py``), slow but bit-identical — which is what
+  the differential test matrix runs in CI.
+* ``backend="pallas-csr"`` — force the CSR-resident fused kernel path
+  (DESIGN.md §18): the kernel gathers straight from the DeviceCSR arrays,
+  no materialized ``(w, W)`` tile in HBM.  Engines or configurations that
+  can't feed it CSR arrays (dense batch layouts, multi-chunk classes,
+  packed-word overflow) fall back to the gathered kernel — bit-identical,
+  so the fallback is invisible except in wall-clock.
+* ``backend="auto"`` — ``pallas-csr`` when the default JAX backend is a
+  TPU, ``jax`` otherwise (interpret mode is a debugging tool, not a fast
+  path); the legacy ``use_kernel=True`` knob keeps meaning the gathered
+  kernel.
 
-Engines that cannot host the kernel (the §13 multi-device sharded engine —
-``shard_map`` bodies stay pure-JAX) treat ``backend="pallas"`` as an
+Engines that cannot host any kernel (the §13 multi-device sharded engine —
+``shard_map`` bodies stay pure-JAX) treat both pallas backends as an
 automatic fallback to pure-JAX: bit-identity makes the fallback invisible
 except in wall-clock.
 """
@@ -27,29 +35,43 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["resolve_backend", "BACKENDS"]
+__all__ = ["resolve_backend", "kernel_mode", "BACKENDS"]
 
-BACKENDS = ("jax", "pallas", "auto")
+BACKENDS = ("jax", "pallas", "pallas-csr", "auto")
 
 
 def resolve_backend(backend: str | None, use_kernel: bool = False) -> str:
-    """Resolve the ``backend=`` option to ``"jax"`` or ``"pallas"``.
+    """Resolve ``backend=`` to ``"jax"``, ``"pallas"`` or ``"pallas-csr"``.
 
     ``use_kernel`` is the legacy per-call knob; it decides only when
-    ``backend`` is None and conflicts loudly with ``backend="jax"``.
+    ``backend`` is None or "auto" and conflicts loudly with
+    ``backend="jax"``.
     """
     if backend is None:
         return "pallas" if use_kernel else "jax"
     if backend == "auto":
-        return "pallas" if (use_kernel or jax.default_backend() == "tpu") \
-            else "jax"
+        if use_kernel:
+            return "pallas"
+        return "pallas-csr" if jax.default_backend() == "tpu" else "jax"
     if backend == "jax":
         if use_kernel:
             raise ValueError(
                 "backend='jax' contradicts use_kernel=True; drop one of them "
                 "(backend='pallas' is the kernel path)")
         return "jax"
-    if backend == "pallas":
-        return "pallas"
+    if backend in ("pallas", "pallas-csr"):
+        return backend
     raise ValueError(
         f"unknown backend {backend!r}; options: {', '.join(BACKENDS)}")
+
+
+def kernel_mode(resolved: str):
+    """Map a resolved backend to the engine-internal ``use_kernel`` value.
+
+    ``False`` — pure JAX; ``True`` — gathered-tile Pallas kernel;
+    ``"csr"`` — CSR-resident fused kernel (gathered fallback where the CSR
+    arrays aren't available).  All three are hashable, so the value can sit
+    in jit static args; ``"csr"`` is truthy, so boolean-ish "any kernel?"
+    checks keep working.
+    """
+    return {"jax": False, "pallas": True, "pallas-csr": "csr"}[resolved]

@@ -10,13 +10,22 @@ from repro.kernels.superstep.kernel import superstep_pallas_call
 
 __all__ = ["superstep_tpu"]
 
-# the working set is FOUR (block_n, W)-class tiles (ids/colors/degrees in,
-# plus the uint32 bit words); budget as in the conflict kernel
+# VMEM budget for one grid step's working set; see _pick_block_n
 _VMEM_BUDGET = 2 * 1024 * 1024
 
 
-def _pick_block_n(w: int, W: int) -> int:
-    by_vmem = max(8, _VMEM_BUDGET // max(W * 4 * 3, 1))
+def _pick_block_n(w: int, W: int, *, tiles: int = 3) -> int:
+    """Largest block_n (multiple of 8, capped at 256) fitting _VMEM_BUDGET.
+
+    The per-row working set is ``tiles`` int32 ``(block_n, W)`` tiles
+    (gathered kernel: neighbor ids/colors/degrees; CSR kernel adds the
+    packed-gather tile, hence ``tiles=4``) PLUS the FirstFit state the
+    kernel allocates per row: ``nwords`` uint32 bitset words and the
+    ``(nwords, 32)`` int32 position expansion the min-reduce scans.
+    """
+    nwords = (W + 1 + 31) // 32
+    per_row = tiles * W * 4 + nwords * 4 + nwords * 32 * 4
+    by_vmem = max(8, _VMEM_BUDGET // max(per_row, 1))
     return max(8, (min(by_vmem, 256, w) // 8) * 8)
 
 

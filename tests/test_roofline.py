@@ -16,7 +16,9 @@ import pytest
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.roofline import (  # noqa: E402
+    BYTES_PER_CELL_CSR,
     BYTES_PER_CELL_PACKED,
+    BYTES_PER_CELL_PALLAS,
     BYTES_PER_CELL_SPLIT,
     coloring_roofline,
 )
@@ -37,7 +39,8 @@ def test_star_graph_known_bytes():
     rl = coloring_roofline(r)
     assert rl["bytes_per_cell"] == BYTES_PER_CELL_PACKED == 8
     assert rl["bytes_total"] == 576
-    assert rl["classes"] == [{"width": 8, "cells": 72, "bytes": 576}]
+    assert rl["classes"] == [{"width": 8, "cells": 72,
+                              "bytes_per_cell": 8, "bytes": 576}]
 
 
 @pytest.mark.parametrize("mode", ["workefficient", "fused"])
@@ -66,12 +69,34 @@ def test_roofline_rates_and_peak_fraction():
 
 
 def test_packed_vs_split_cell_size():
-    """backend='pallas' gathers colors/degrees separately (pack_degrees is
-    gated off under the kernel), so its records use the 12 B split cell."""
     packed = coloring_roofline(((8, 72),), packed=True)
     split = coloring_roofline(((8, 72),), packed=False)
     assert split["bytes_per_cell"] == BYTES_PER_CELL_SPLIT == 12
     assert split["bytes_total"] == packed["bytes_total"] * 12 // 8 == 864
+
+
+def test_mode_knob_cell_sizes():
+    """Schema-8 records charge each backend its REAL traffic: the gathered
+    pallas path materializes the split tiles in HBM and reads them back
+    (2x split = 24 B), the §18 CSR-resident kernel reads id + packed word
+    once (8 B).  The mode knob must beat the legacy packed flag and stamp
+    per-class bytes_per_cell so the pallas vs pallas-csr delta is visible
+    per degree class."""
+    pallas = coloring_roofline(((8, 72),), mode="pallas")
+    csr = coloring_roofline(((8, 72),), mode="csr")
+    assert pallas["bytes_per_cell"] == BYTES_PER_CELL_PALLAS == 24
+    assert csr["bytes_per_cell"] == BYTES_PER_CELL_CSR == 8
+    assert pallas["mode"] == "pallas" and csr["mode"] == "csr"
+    for doc in (pallas, csr):
+        for c in doc["classes"]:
+            assert c["bytes_per_cell"] == doc["bytes_per_cell"]
+            assert c["bytes"] == c["cells"] * c["bytes_per_cell"]
+    # mode overrides the legacy packed flag; packed stays the None default
+    assert coloring_roofline(((8, 72),), packed=False,
+                             mode="csr")["bytes_per_cell"] == 8
+    assert coloring_roofline(((8, 72),), packed=False)["mode"] == "split"
+    with pytest.raises(ValueError, match="unknown roofline mode"):
+        coloring_roofline(((8, 72),), mode="simd")
 
 
 def test_multiclass_bytes_sum():
