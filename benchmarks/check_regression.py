@@ -35,7 +35,16 @@ fails (exit 1) when any produced record
   — a bench run that silently left the clean fast path (ingest repairs
   firing on a supposedly-clean suite graph, or the guarantee ladder
   escalating a run that should converge on its own) is a robustness
-  regression even when the colors come out right.
+  regression even when the colors come out right;
+* is a schema-9 ``serve`` document (``benchmarks/serve.py``, §19) whose
+  steady phase shows tail-latency blowup (``p99_ms`` above the
+  baseline's ``max_p99_over_p50`` × ``p50_ms``), sheds load at steady
+  rate (rejection rate above ``max_steady_rejection_rate``), or leaves
+  the jit cache after warmup (``jit_misses_after_warmup`` above
+  ``max_jit_misses_after_warmup`` — the §19 bucketed micro-batching
+  contract); or whose overload burst FAILED to produce structured
+  rejections / let the queue grow past its limit — backpressure that
+  does not reject under flood is an unbounded queue.
 
 Color comparisons only apply when the document's ``scale`` matches the
 baseline's (the weekly ``--scale small`` run still gets validity/error
@@ -57,6 +66,10 @@ import sys
 
 DEFAULT_BASELINE = "benchmarks/baseline_tiny.json"
 MIN_WORK_RATIO = 3.0  # conservative CI floor; the §14 test asserts >= 5
+# schema-9 serving gates (§19); the baseline's "serve" entry can override
+MAX_P99_OVER_P50 = 3.0
+MAX_STEADY_REJECTION_RATE = 0.02
+MAX_JIT_MISSES_AFTER_WARMUP = 0
 # algorithms whose schema-6 records must carry a trace section (mirrors
 # benchmarks/run.py BACKEND_ALGS; hardcoded to keep this gate stdlib-only)
 TRACED_ALGS = ("data_driven", "fused", "distance2", "dynamic")
@@ -211,15 +224,83 @@ def check(doc: dict, baseline: dict) -> tuple[list[str], list[str]]:
                         f"dynamic {name}: jit misses {misses} exceed the "
                         f"baseline cap {cap} — churn rounds are retracing "
                         "instead of hitting the jit cache")
+    _check_serve(doc, baseline, fails)
     return fails, notes
+
+
+def _check_serve(doc: dict, baseline: dict, fails: list[str]) -> None:
+    """Schema-9 serving gates (§19): latency, backpressure, jit stability."""
+    serve = doc.get("serve")
+    if serve is None:
+        return
+    base = baseline.get("serve", {})
+    steady = serve.get("steady")
+    if steady is None:
+        fails.append("serve: document missing its 'steady' section")
+    else:
+        ratio_cap = base.get("max_p99_over_p50", MAX_P99_OVER_P50)
+        p50 = steady.get("p50_ms", 0)
+        p99 = steady.get("p99_ms", 0)
+        if p50 <= 0:
+            fails.append(f"serve steady: p50_ms {p50} <= 0 (no latencies?)")
+        elif p99 > ratio_cap * p50:
+            fails.append(
+                f"serve steady: p99 {p99} ms exceeds {ratio_cap} x p50 "
+                f"({p50} ms) — tail latency blowup (queueing discipline "
+                "or inline maintenance regressed)")
+        rej_cap = base.get("max_steady_rejection_rate",
+                           MAX_STEADY_REJECTION_RATE)
+        if steady.get("rejection_rate", 0) > rej_cap:
+            fails.append(
+                f"serve steady: rejection rate {steady['rejection_rate']} "
+                f"above {rej_cap} at the calibrated steady rate — the "
+                "service sheds load it should absorb")
+        miss_cap = base.get("max_jit_misses_after_warmup",
+                            MAX_JIT_MISSES_AFTER_WARMUP)
+        misses = steady.get("jit_misses_after_warmup", 0)
+        if misses > miss_cap:
+            fails.append(
+                f"serve steady: {misses} micro-batch jit misses after "
+                f"warmup (cap {miss_cap}) — steady-state traffic left the "
+                "jit cache (§19 bucketing contract)")
+        submitted = steady.get("submitted", 0)
+        if steady.get("completed", 0) + steady.get("rejected", 0) != submitted:
+            fails.append(
+                "serve steady: completed + rejected != submitted — "
+                "requests were lost")
+    over = serve.get("overload")
+    if over is None:
+        fails.append("serve: document missing its 'overload' section")
+    else:
+        if over.get("rejected", 0) <= 0:
+            fails.append(
+                "serve overload: the burst produced NO Overloaded "
+                "rejections — backpressure is not engaging (unbounded "
+                "queue growth)")
+        limit = over.get("queue_limit", 0)
+        if limit and over.get("queue_peak", 0) > limit:
+            fails.append(
+                f"serve overload: queue peaked at {over['queue_peak']} "
+                f"past its limit {limit} — the bound is not enforced")
 
 
 def make_baseline(docs: list[dict]) -> dict:
     """Distill produced documents into the checked-in baseline shape."""
-    out: dict = {"schema": 7, "scale": None, "algorithms": {},
+    out: dict = {"schema": 9, "scale": None, "algorithms": {},
                  "bipartite": {}, "dynamic": {}}
     for doc in docs:
         out["scale"] = doc.get("scale", out["scale"])
+        if "serve" in doc:
+            # accept the observed warmup behaviour; the latency/rejection
+            # bounds stay at the conservative module defaults
+            misses = (doc["serve"].get("steady", {})
+                      .get("jit_misses_after_warmup", 0))
+            out["serve"] = {
+                "max_p99_over_p50": MAX_P99_OVER_P50,
+                "max_steady_rejection_rate": MAX_STEADY_REJECTION_RATE,
+                "max_jit_misses_after_warmup": max(
+                    misses, MAX_JIT_MISSES_AFTER_WARMUP),
+            }
         for alg, per_graph in doc.get("algorithms", {}).items():
             slot = out["algorithms"].setdefault(alg, {})
             for name, rec in per_graph.items():

@@ -10,10 +10,14 @@ distributed / launch (the LM substrate and multi-pod runtime).  See
 README.md and DESIGN.md.
 """
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"
 
 _API_NAMES = ("color", "color_batch", "algorithms", "get_algorithm",
               "register", "open_session")
+_OPTIONS_NAMES = ("ColorOptions",)
+_ERROR_NAMES = ("ReproError", "IngestError", "CapacityError",
+                "NonConvergenceError", "Overloaded", "SessionEvicted")
+_SERVICE_NAMES = ("ColoringService",)
 
 
 def __getattr__(name):
@@ -22,8 +26,21 @@ def __getattr__(name):
         from repro import api
 
         return getattr(api, name)
+    if name in _OPTIONS_NAMES:
+        from repro import options
+
+        return getattr(options, name)
+    if name in _ERROR_NAMES:
+        from repro import errors
+
+        return getattr(errors, name)
+    if name in _SERVICE_NAMES:
+        from repro.launch import coloring_service
+
+        return getattr(coloring_service, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(list(globals()) + list(_API_NAMES))
+    return sorted(list(globals()) + list(_API_NAMES) + list(_OPTIONS_NAMES)
+                  + list(_ERROR_NAMES) + list(_SERVICE_NAMES))

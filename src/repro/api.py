@@ -50,12 +50,14 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING, Callable, Iterable
 
+from repro.options import ColorOptions
+
 if TYPE_CHECKING:  # imports stay lazy at runtime to avoid core<->api cycles
     from repro.core.coloring import ColoringResult
     from repro.core.csr import CSRGraph
 
 __all__ = ["register", "color", "color_batch", "algorithms", "get_algorithm",
-           "open_session"]
+           "open_session", "ColorOptions"]
 
 _REGISTRY: dict[str, Callable] = {}
 
@@ -79,11 +81,26 @@ def _ensure_registered() -> None:
     import repro.dynamic  # noqa: F401
 
 
-def open_session(rows, cols=None, **opts):
-    """Open a streaming ``ColoringSession`` (lazy alias of ``repro.dynamic``)."""
+def open_session(rows, cols=None, *, options: ColorOptions | None = None,
+                 **opts):
+    """Open a streaming ``ColoringSession`` (lazy alias of ``repro.dynamic``).
+
+    Accepts the unified ``ColorOptions`` object (§19) or the equivalent
+    loose kwargs — both normalize identically inside the session.
+    """
     from repro.dynamic import open_session as _open_session
 
-    return _open_session(rows, cols, **opts)
+    return _open_session(rows, cols, options=options, **opts)
+
+
+def _normalize(algorithm, options, opts) -> ColorOptions:
+    """One ``ColorOptions`` from (positional algorithm | options, kwargs)."""
+    if isinstance(algorithm, ColorOptions):
+        if options is not None:
+            raise TypeError(
+                "pass ColorOptions positionally OR as options=, not both")
+        options, algorithm = algorithm, None
+    return ColorOptions.normalize(options, algorithm=algorithm, **opts)
 
 
 def algorithms() -> tuple[str, ...]:
@@ -103,13 +120,18 @@ def get_algorithm(name: str) -> Callable:
         ) from None
 
 
-def color(graph: "CSRGraph", algorithm: str = "data_driven", *,
-          validate_input: str | None = None, ensure_valid: bool = False,
-          **opts) -> "ColoringResult":
+def color(graph: "CSRGraph", algorithm: "str | ColorOptions | None" = None,
+          *, options: ColorOptions | None = None, **opts) -> "ColoringResult":
     """Color ``graph`` with the named algorithm; extra ``opts`` pass through.
 
     Returns a ``ColoringResult``; ``result.colors`` is an int32 array in
     ``[1, num_colors]`` and ``result.num_colors`` the color count.
+
+    Options come in either spelling (§19) — a frozen ``ColorOptions``
+    (positionally in place of ``algorithm``, or as ``options=``) or loose
+    kwargs; both normalize into the same object first, so results are
+    bit-identical across spellings.  Kwargs override fields already set on
+    the options object.  The default algorithm is ``"data_driven"``.
 
     Robustness knobs (DESIGN.md §17):
 
@@ -127,9 +149,12 @@ def color(graph: "CSRGraph", algorithm: str = "data_driven", *,
     error.  Every escalation taken is recorded in
     ``result.degradations`` and emitted as ``guarantee_ladder`` obs spans.
     """
+    o = _normalize(algorithm, options, opts)
+    algorithm = o.algorithm or "data_driven"
     fn = get_algorithm(algorithm)
+    engine_opts = o.engine_kwargs()
     pre = ()
-    if validate_input is not None:
+    if o.validate_input is not None:
         from repro.core.csr import CSRGraph as _CSR
         from repro.ingest import sanitize_csr
 
@@ -138,13 +163,13 @@ def color(graph: "CSRGraph", algorithm: str = "data_driven", *,
                 "validate_input= applies to CSRGraph inputs; got "
                 f"{type(graph).__name__} (sanitize bipartite halves with "
                 "sanitize_csr(..., require_symmetric=False) directly)")
-        graph, report = sanitize_csr(graph, policy=validate_input)
+        graph, report = sanitize_csr(graph, policy=o.validate_input)
         pre = report.degradations()
-    result = fn(graph, **opts)
+    result = fn(graph, **engine_opts)
     if pre:
         result.degradations = pre + tuple(result.degradations)
-    if ensure_valid:
-        result = _apply_ladder(graph, algorithm, fn, opts, result)
+    if o.ensure_valid:
+        result = _apply_ladder(graph, algorithm, fn, engine_opts, result)
     return result
 
 
@@ -182,10 +207,24 @@ def _apply_ladder(graph, algorithm: str, fn: Callable, opts: dict, result):
     return ensure_valid_result(cg, result, rerun)
 
 
+# the knobs the batched fused engine understands — everything else must go
+# through the per-graph ``color`` path.  Derived from ColorOptions fields
+# (this replaced the old hand-rolled ``supported = {...}`` set; §19).
+_BATCH_SUPPORTED = ("heuristic", "firstfit", "max_iters", "tail_serial",
+                    "engine", "devices", "backend", "trace",
+                    "validate_input", "ensure_valid")
+
+
 def color_batch(
-    graphs: Iterable["CSRGraph"], algorithm: str = "fused", **opts
+    graphs: Iterable["CSRGraph"],
+    algorithm: "str | ColorOptions | None" = None, *,
+    options: ColorOptions | None = None, **opts
 ) -> "list[ColoringResult]":
     """Color many graphs; the serving-path entry point.
+
+    Options come as a ``ColorOptions`` or loose kwargs, exactly like
+    ``color`` (§19); results are bit-identical across spellings.  The
+    default algorithm is ``"fused"``.
 
     ``trace=True`` (supported by every algorithm here) attaches a per-run
     ``RunTrace`` to each result — see ``repro.obs``.
@@ -193,39 +232,61 @@ def color_batch(
     ``algorithm="fused"`` uses the batched engine: the graphs are packed into
     one stacked padded-adjacency layout and a single jitted ``while_loop``
     colors all of them concurrently (see ``core/batch.py``).  Any other name
-    loops ``color`` over the graphs.
+    loops ``color`` over the graphs.  Algorithm-specific knobs the batched
+    engine cannot honor are refused by name with the supported list.
     """
     graphs = list(graphs)
+    o = _normalize(algorithm, options, opts)
+    algorithm = o.algorithm or "fused"
     if algorithm in ("fused", "distance2"):
         from repro.core.batch import color_batch_fused, color_batch_sharded
 
-        supported = {"heuristic", "firstfit", "use_kernel", "max_iters",
-                     "tail_serial", "engine", "devices", "backend", "trace"}
-        extra = set(opts) - supported
+        extra = o.extra_dict()
+        devices = extra.pop("devices", None)
         if extra:
             raise ValueError(
                 f"options {sorted(extra)} are not supported by the batched "
-                f"fused engine (supported: {sorted(supported)}); "
+                f"fused engine (supported: {sorted(_BATCH_SUPPORTED)}); "
                 f"use color(g, {algorithm!r}, ...) per graph instead"
             )
-        engine = opts.pop("engine", "batch")
-        devices = opts.pop("devices", None)
+        pre = [()] * len(graphs)
+        if o.validate_input is not None:
+            from repro.ingest import sanitize_csr
+
+            sanitized = []
+            for i, g in enumerate(graphs):
+                g, report = sanitize_csr(g, policy=o.validate_input)
+                sanitized.append(g)
+                pre[i] = report.degradations()
+            graphs = sanitized
+        kw = o.engine_kwargs()
+        kw.pop("engine", None)
+        engine = o.engine or "batch"
         if engine == "sharded":
-            return color_batch_sharded(
+            results = color_batch_sharded(
                 graphs, distance2=(algorithm == "distance2"),
-                devices=devices, **opts
+                devices=devices, **kw
             )
-        if engine != "batch":
+        elif engine != "batch":
             raise ValueError(
                 f"unknown batch engine {engine!r}; options: batch, sharded"
             )
-        if devices is not None:
+        elif devices is not None:
             raise ValueError(
                 "devices= only applies to engine='sharded'; the default "
                 "batched engine runs on the default device placement"
             )
-        return color_batch_fused(
-            graphs, distance2=(algorithm == "distance2"), **opts
-        )
-    fn = get_algorithm(algorithm)
-    return [fn(g, **opts) for g in graphs]
+        else:
+            results = color_batch_fused(
+                graphs, distance2=(algorithm == "distance2"), **kw
+            )
+        for g, r, p in zip(graphs, results, pre):
+            if p:
+                r.degradations = tuple(p) + tuple(r.degradations)
+        if o.ensure_valid:
+            fn = get_algorithm(algorithm)
+            results = [_apply_ladder(g, algorithm, fn, kw, r)
+                       for g, r in zip(graphs, results)]
+        return results
+    per_graph = o.merged(algorithm=algorithm)
+    return [color(g, options=per_graph) for g in graphs]

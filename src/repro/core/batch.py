@@ -61,7 +61,7 @@ from repro.obs.trace import (
 
 __all__ = ["GraphBatch", "SessionBatch", "batched_sgr_step",
            "batched_ragged_step", "color_batch_fused", "color_batch_sharded",
-           "open_session_batch"]
+           "open_session_batch", "session_shape_class"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -340,7 +340,8 @@ def color_batch_fused(
                     GraphBatch.from_graphs([graphs[i] for i in idxs],
                                            distance2=distance2),
                     heuristic=heuristic, firstfit=firstfit,
-                    use_kernel=use_kernel, max_iters=max_iters,
+                    backend=("pallas" if use_kernel else "jax"),
+                    max_iters=max_iters,
                     distance2=distance2, tail_serial=tail_serial,
                     trace=trace,
                 )
@@ -450,6 +451,22 @@ def color_batch_fused(
     return out
 
 
+def session_shape_class(session) -> tuple:
+    """The pow2 shape class a session's recolor dispatch buckets under.
+
+    ``(pow2 n, pow2 max_degree)`` — the two quantities that dominate a
+    frontier recolor's jit cache key (§14: padded DeviceCSR width and
+    worklist/class shapes both derive from them).  Two sessions in the
+    same class fed similar-size frontiers present REPEATING keys to the
+    jitted engine, so the serving layer's micro-batcher (§19) keys its
+    buckets on ``(session_shape_class(s), ColorOptions)``: the first
+    request of a bucket compiles, the rest of the bucket reuses.
+    """
+    g = session.delta.graph()
+    return (next_pow2(max(session.n, 1)),
+            next_pow2(max(g.max_degree, 1)))
+
+
 class SessionBatch:
     """Per-graph ``ColoringSession``s for B-graph churn (§14 serving path).
 
@@ -462,11 +479,25 @@ class SessionBatch:
     ``Σ n_i``.  Sessions are independent (their frontiers never interact),
     so per-graph recoloring is exact, and each graph's colors match what a
     standalone ``ColoringSession`` fed the same deltas would hold.
+
+    Dispatch is BUCKETED (§19): a ``recolor()`` sweep orders the dirty
+    sessions by pow2 shape class (``session_shape_class``) so same-class
+    sessions run consecutively and share the jitted engine's cache
+    entries — per-graph results still come back in graph order, and the
+    order sessions run in cannot change any colors (independence above).
+
+    Accepts the unified ``ColorOptions`` (``options=``) or the equivalent
+    loose session kwargs, like ``open_session`` (§19).
     """
 
-    def __init__(self, graphs: "Iterable[CSRGraph]", **opts):
+    def __init__(self, graphs: "Iterable[CSRGraph]", *, options=None,
+                 **opts):
         from repro.dynamic import ColoringSession  # lazy: dynamic -> core
 
+        if options is not None or opts:
+            from repro.options import ColorOptions
+
+            opts = ColorOptions.normalize(options, **opts).session_kwargs()
         self.sessions = [ColoringSession(g, **opts) for g in graphs]
 
     @property
@@ -481,9 +512,28 @@ class SessionBatch:
         """Indices of graphs with a pending (non-empty) frontier."""
         return [b for b, s in enumerate(self.sessions) if s.frontier().size]
 
+    def buckets(self) -> "dict[tuple, list[int]]":
+        """Dirty graph indices grouped by pow2 shape class (dispatch order)."""
+        out: dict[tuple, list[int]] = {}
+        for b, s in enumerate(self.sessions):
+            if s.pending_dirty:
+                out.setdefault(session_shape_class(s), []).append(b)
+        return out
+
     def recolor(self, *, full: bool = False) -> list[ColoringResult]:
-        """Repair every dirty session; one (possibly no-op) result per graph."""
-        return [s.recolor(full=full) for s in self.sessions]
+        """Repair every dirty session; one (possibly no-op) result per graph.
+
+        Dirty sessions run bucket-by-bucket (see class doc); clean ones
+        no-op afterwards.  Results come back in graph order regardless.
+        """
+        results: list = [None] * self.B
+        for _, idxs in sorted(self.buckets().items()):
+            for b in idxs:
+                results[b] = self.sessions[b].recolor(full=full)
+        for b, s in enumerate(self.sessions):
+            if results[b] is None:
+                results[b] = s.recolor(full=full)
+        return results
 
     def results(self) -> list[ColoringResult]:
         return [s.result for s in self.sessions]
@@ -491,10 +541,29 @@ class SessionBatch:
     def validate(self) -> bool:
         return all(s.validate() for s in self.sessions)
 
+    def metrics(self) -> dict:
+        """Aggregated engine-cache accounting, per shape-class bucket."""
+        per_bucket: dict = {}
+        hits = misses = 0
+        for s in self.sessions:
+            m = s.metrics()
+            key = repr(session_shape_class(s))
+            agg = per_bucket.setdefault(
+                key, {"sessions": 0, "engine_cache_hits": 0,
+                      "engine_cache_misses": 0})
+            agg["sessions"] += 1
+            agg["engine_cache_hits"] += m["engine_cache_hits"]
+            agg["engine_cache_misses"] += m["engine_cache_misses"]
+            hits += m["engine_cache_hits"]
+            misses += m["engine_cache_misses"]
+        return {"engine_cache_hits": hits, "engine_cache_misses": misses,
+                "buckets": per_bucket}
 
-def open_session_batch(graphs: "Iterable[CSRGraph]", **opts) -> SessionBatch:
+
+def open_session_batch(graphs: "Iterable[CSRGraph]", *, options=None,
+                       **opts) -> SessionBatch:
     """Open per-graph streaming sessions over ``graphs`` (§14 churn serving)."""
-    return SessionBatch(graphs, **opts)
+    return SessionBatch(graphs, options=options, **opts)
 
 
 _EMPTY = CSRGraph(np.zeros(1, np.int64), np.zeros(0, np.int32))

@@ -596,9 +596,10 @@ def run_ragged_engine(
     if pack_degrees and not _packed_gather_ok(tail_width):
         # §17 capacity guard: the packed color|deg<<16 word would overflow
         # int32 past deg 2^15 — silent color corruption, so refuse loudly
+        from repro.errors import CapacityError
         from repro.ingest import PACKED_GATHER_MAX_DEG
 
-        raise ValueError(
+        raise CapacityError(
             f"pack_degrees=True with tail_width={tail_width}: degrees must "
             f"stay < {PACKED_GATHER_MAX_DEG} to fit the packed gather word "
             "(color | deg << 16, int32); rerun with pack_degrees=False")

@@ -140,10 +140,11 @@ def _build_step(mesh, *, provider_kind: str, n: int, n_loc: int,
     if pack_halo:
         # §17 capacity guard: ids >= 2^15 flip the int32 sign bit inside
         # id << 16 and unpack as garbage neighbors — refuse, never corrupt
+        from repro.errors import CapacityError
         from repro.ingest import PACKED_HALO_MAX_N, packed_halo_ok
 
         if not packed_halo_ok(n):
-            raise ValueError(
+            raise CapacityError(
                 f"pack_halo=True with n={n}: vertex ids must stay < "
                 f"{PACKED_HALO_MAX_N} to fit the id << 16 | color halo "
                 "word (int32); rerun with pack_halo=False")

@@ -377,7 +377,9 @@ def compress_jacobian_pattern(pattern, *, on_fail: str = "ladder",
         bg = BipartiteGraph.from_dense(pattern)
     result = color_bipartite(bg, **opts)
     if not result.converged and on_fail == "raise":
-        raise ValueError(
+        from repro.errors import NonConvergenceError
+
+        raise NonConvergenceError(
             f"bipartite coloring did not converge after {result.iterations} "
             f"super-steps (raise max_iters); refusing to build a partial "
             f"column partition"

@@ -178,9 +178,19 @@ class DeltaCSR:
             self.compactions += 1
         return self._base
 
+    def compaction_due(self, frac: float | None = None) -> bool:
+        """True once the overlay outgrows ``frac`` of the base (cheap poll).
+
+        ``frac`` defaults to the live ``compact_frac``; a pooled session
+        (§19) sets ``compact_frac=inf`` to suppress the inline compaction
+        and polls this with its CONFIGURED fraction from an idle slot.
+        """
+        frac = self.compact_frac if frac is None else frac
+        return self.overlay_size > frac * max(self._base_keys.size, 64)
+
     def _touched(self) -> None:
         self._cache = None
-        if self.overlay_size > self.compact_frac * max(self._base_keys.size, 64):
+        if self.compaction_due():
             self.compact()
 
     # -- batched mutations (each returns the dirtied vertex ids) -------------

@@ -52,20 +52,34 @@ from repro.obs.trace import empty_trace
 
 __all__ = ["ColoringSession", "color_dynamic", "open_session"]
 
+# Frontiers at or below this size recolor as a single full-width class so
+# the engine jit key is a function of pow2(frontier.size) alone; above it
+# the per-degree-class tiling pays for itself and keys change slowly.
+_SMALL_FRONTIER = 64
 
-def _device_csr_padded(g: CSRGraph, wcap: int) -> DeviceCSR:
+
+def _padded_edge_cap(m: int, wcap: int) -> int:
+    """Pow2 device-CSR column capacity with ≥25% edge-growth headroom."""
+    return next_pow2(m + wcap + max(m // 4, 64))
+
+
+def _device_csr_padded(g: CSRGraph, wcap: int,
+                       cap: int | None = None) -> DeviceCSR:
     """A ``DeviceCSR`` whose array shapes are power-of-two stable.
 
     ``DeviceCSR.from_csr`` sizes ``col_padded`` exactly (``m + Δmax``), so
     every churn round would present new shapes to the jitted engine and
-    retrace it.  Padding the column array to ``next_pow2(m + wcap)`` (extra
-    slots hold the inert sentinel ``n``) makes consecutive recolors of a
-    slowly-mutating graph hit the jit cache instead.
+    retrace it.  Padding the column array to a power of two (extra slots
+    hold the inert sentinel ``n``) with at least 25% growth headroom makes
+    consecutive recolors of a slowly-mutating graph hit the jit cache —
+    and keeps hitting it until the graph grows past the headroom, so a
+    long-lived pooled session recompiles O(log m) times, never per-delta.
     """
     import jax.numpy as jnp
 
     n, m = g.n, g.m
-    cap = next_pow2(m + wcap)
+    if cap is None:
+        cap = _padded_edge_cap(m, wcap)
     col = np.full(cap, n, np.int32)
     col[:m] = g.col_indices
     deg = np.concatenate([g.degrees, np.zeros(1, np.int32)]).astype(np.int32)
@@ -75,16 +89,24 @@ def _device_csr_padded(g: CSRGraph, wcap: int) -> DeviceCSR:
     )
 
 
-def open_session(rows, cols=None, *, n: int | None = None,
+def open_session(rows, cols=None, *, n: int | None = None, options=None,
                  **opts) -> "ColoringSession":
     """Open a streaming session from COO edge arrays (or a ready CSRGraph).
 
     ``rows``/``cols`` are undirected edge endpoints (symmetrized and
     deduplicated like every loader in the repo); ``n`` widens the vertex
-    count beyond ``max(endpoint) + 1`` when isolated vertices exist.  Extra
-    ``opts`` (heuristic, firstfit, mode, tiling, tail_serial, max_iters,
-    compact_frac, backend) configure the session's engine.
+    count beyond ``max(endpoint) + 1`` when isolated vertices exist.
+
+    Options come in either spelling (§19): a frozen ``ColorOptions`` as
+    ``options=``, or the loose kwargs (heuristic, firstfit, mode, tiling,
+    tail_serial, max_iters, compact_frac, backend, …) exactly as before —
+    both normalize through ``ColorOptions.session_kwargs`` first, so the
+    resulting sessions are configured identically.
     """
+    if options is not None or opts:
+        from repro.options import ColorOptions
+
+        opts = ColorOptions.normalize(options, **opts).session_kwargs()
     if cols is None:
         if not isinstance(rows, CSRGraph):
             raise TypeError(
@@ -127,7 +149,8 @@ class ColoringSession:
                  max_iters: int | None = None, compact_frac: float = 0.25,
                  backend: str | None = None, trace=False,
                  validate_input: str | None = None, on_fail: str = "raise",
-                 durable_dir: str | None = None, snapshot_every: int = 64):
+                 durable_dir: str | None = None, snapshot_every: int = 64,
+                 defer_maintenance: bool = False):
         from repro.dynamic.delta import DeltaCSR
 
         if validate_input is not None and isinstance(graph, CSRGraph):
@@ -143,7 +166,12 @@ class ColoringSession:
             heuristic=heuristic, firstfit=firstfit, mode=mode, tiling=tiling,
             tail_serial=tail_serial, max_iters=max_iters,
             compact_frac=compact_frac, backend=backend, trace=trace,
-            on_fail=on_fail, snapshot_every=snapshot_every)
+            on_fail=on_fail, snapshot_every=snapshot_every,
+            defer_maintenance=defer_maintenance)
+        if self._defer_maintenance:
+            # the pool owns compaction scheduling: suppress the inline
+            # auto-compact and let maintain() run it from an idle slot
+            self.delta.compact_frac = float("inf")
         self.result = self._cold(self.delta.graph())
         if not self.result.converged and self._on_fail == "ladder":
             self.result = self._escalate(self.result, True)
@@ -156,7 +184,7 @@ class ColoringSession:
 
     def _configure(self, *, heuristic, firstfit, mode, tiling, tail_serial,
                    max_iters, compact_frac, backend, trace, on_fail,
-                   snapshot_every) -> None:
+                   snapshot_every, defer_maintenance=False) -> None:
         from repro.kernels.dispatch import kernel_mode, resolve_backend
 
         if on_fail not in ("raise", "ladder"):
@@ -176,8 +204,12 @@ class ColoringSession:
         self._use_kernel = kernel_mode(resolve_backend(backend))
         # §16: trace knob threads to the cold and every frontier recolor
         self._trace = trace
-        # §17: non-convergence policy + durability plumbing
+        # §17: non-convergence policy + durability plumbing.  A pooled
+        # session (§19) runs with defer_maintenance=True: snapshots stop
+        # firing inline from the journal hot path and wait for the owner to
+        # call maintain() in an idle slot instead.
         self._on_fail = on_fail
+        self._defer_maintenance = bool(defer_maintenance)
         self._snapshot_every = int(snapshot_every)
         self._journal = None
         self._records_since_snapshot = 0
@@ -224,6 +256,16 @@ class ColoringSession:
         if not self._dirty:
             return np.zeros(0, np.int64)
         return np.unique(np.concatenate(self._dirty)).astype(np.int64)
+
+    @property
+    def pending_dirty(self) -> int:
+        """Cheap upper bound on the dirty-frontier size (no dedup pass).
+
+        The pool's idle/dirty signal (§19): 0 means a recolor would no-op,
+        a positive value bounds the repair work without paying the
+        ``frontier()`` concatenate+unique on every poll.
+        """
+        return sum(int(a.size) for a in self._dirty)
 
     def validate(self) -> bool:
         """True iff the committed coloring is proper on the current graph."""
@@ -309,7 +351,9 @@ class ColoringSession:
             if self._on_fail == "ladder":
                 result = self._escalate(result, full)
             else:
-                raise RuntimeError(
+                from repro.errors import NonConvergenceError
+
+                raise NonConvergenceError(
                     "recolor() hit max_iters before converging; the session "
                     "coloring was NOT updated — retry with a larger "
                     "max_iters, tail_serial enabled, recolor(full=True), or "
@@ -360,42 +404,67 @@ class ColoringSession:
         colors0[frontier] = 0            # the frontier recolors from scratch
         deg = g.degrees
         dmax = max(g.max_degree, 1)
-        wcap = next_pow2(dmax)
-        classes_idx, widths = _resolve_classes(
-            deg[frontier], (), self._tiling)
-        # pow2-pad worklists (inert sentinel n) and pow2-round tile widths so
-        # consecutive recolors present REPEATING shapes/static-args to the
-        # jitted engine — without this every churn round retraces the
-        # while_loop and wall time is dominated by compilation, not work
-        widths = [min(next_pow2(w), wcap) for w in widths]
+        # High-water capacities: balanced churn (add + remove deltas) makes
+        # max-degree and m FLAP around pow2 boundaries — if the caps tracked
+        # them both directions, the session would alternate between two jit
+        # keys per boundary.  Never shrinking a capacity keeps the key set
+        # monotone: after the first crossing only the larger key re-presents.
+        self._wcap_hw = wcap = max(next_pow2(dmax),
+                                   getattr(self, "_wcap_hw", 0))
+        self._ecap_hw = ecap = max(_padded_edge_cap(g.m, wcap),
+                                   getattr(self, "_ecap_hw", 0))
+        small = frontier.size <= _SMALL_FRONTIER
+        if small:
+            # small-frontier fast path: ONE class at the full tile width,
+            # padded to the fixed ``_SMALL_FRONTIER`` floor — the jit key is
+            # then a single constant per capacity state, independent of the
+            # frontier's size or how the dirtied vertices scatter across
+            # degree classes (§19 serving stability: steady churn re-presents
+            # one warm key).  The padded work delta is negligible here.
+            classes_idx, widths = [np.arange(frontier.size)], [wcap]
+        else:
+            classes_idx, widths = _resolve_classes(
+                deg[frontier], (), self._tiling)
+            # pow2-round tile widths so consecutive recolors present
+            # REPEATING static args to the jitted engine
+            widths = [min(next_pow2(w), wcap) for w in widths]
+        # pow2-pad worklists (inert sentinel n) for the same reason — without
+        # shape-stable padding every churn round retraces the while_loop and
+        # wall time is dominated by compilation, not work
         classes, counts = [], []
         for ci in classes_idx:
             ids = frontier[ci].astype(np.int32)
+            pad_to = _SMALL_FRONTIER if small else next_pow2(ids.size)
             classes.append(np.concatenate(
-                [ids, np.full(next_pow2(ids.size) - ids.size, n, np.int32)]))
+                [ids, np.full(pad_to - ids.size, n, np.int32)]))
             counts.append(int(ids.size))
         deg_ext = _graph_device_cache(g, "deg_ext", lambda: jnp.asarray(
             np.concatenate([deg, np.zeros(1, np.int32)]).astype(np.int32)))
         provider = _graph_device_cache(
-            g, "dcsr_dyn", lambda: _device_csr_padded(g, wcap))
+            g, f"dcsr_dyn:{wcap}:{ecap}",
+            lambda: _device_csr_padded(g, wcap, cap=ecap))
         tail_enabled, thr = resolve_tail_threshold(
             self._tail_serial, int(frontier.size))
         # pack_degrees needs colors < 2^15 — frozen colors included (they can
-        # exceed the CURRENT dmax + 1 bound after deletions shrink the graph)
-        pack = _packed_gather_ok(dmax, int(colors0.max(initial=0)))
+        # exceed the CURRENT dmax + 1 bound after deletions shrink the graph).
+        # Checked against wcap, matching the engine's tail_width guard.
+        pack = _packed_gather_ok(wcap, int(colors0.max(initial=0)))
         # engine cache accounting: everything below that feeds a jit static
         # arg or an array shape.  A key this session has already presented
         # re-enters the jit cache; a fresh one forces a trace+compile.
-        key = (n, next_pow2(g.m + wcap), wcap,
+        key = (n, ecap, wcap,
                tuple(c.shape[0] for c in classes), tuple(widths),
                tail_enabled, thr, pack, self._max_iters or n + 1)
         hit = key in self._engine_keys
         self._engine_keys.add(key)
         self._counters["engine_cache_hits" if hit else
                        "engine_cache_misses"] += 1
+        # tail_width=wcap (not raw dmax): the serial-tail program's width is
+        # a static jit arg, and deltas creep max_degree — pow2 rounding makes
+        # that creep hit the cache; the extra gather slots are inert
         return run_ragged_engine(
             n=n, provider=provider, deg_ext=deg_ext, classes=classes,
-            tile_widths=widths, acc_widths=widths, tail_width=dmax,
+            tile_widths=widths, acc_widths=widths, tail_width=wcap,
             mode=self._mode, heuristic=self._heuristic, kind=self._firstfit,
             use_kernel=self._use_kernel, coarsen=1, coarsen_lanes=None,
             tail_enabled=tail_enabled, tail_threshold=thr,
@@ -409,7 +478,8 @@ class ColoringSession:
     def _journal_append(self, kind: str, payload: dict) -> None:
         self._journal.append(kind, payload)
         self._records_since_snapshot += 1
-        if self._records_since_snapshot >= self._snapshot_every:
+        if (self._records_since_snapshot >= self._snapshot_every
+                and not self._defer_maintenance):
             self.checkpoint()
 
     def checkpoint(self) -> None:
@@ -445,10 +515,63 @@ class ColoringSession:
                 "trace": self._trace,
                 "on_fail": self._on_fail,
                 "snapshot_every": self._snapshot_every,
+                "defer_maintenance": self._defer_maintenance,
             },
         }
         self._journal.write_snapshot(arrays, meta)
         self._records_since_snapshot = 0
+
+    # -- pool hooks (§19): deferred maintenance + spill ----------------------
+    def maintenance_due(self) -> dict:
+        """Cheap poll: which deferred maintenance steps are owed.
+
+        ``compact`` uses the session's CONFIGURED ``compact_frac`` even
+        when ``defer_maintenance=True`` pinned the live DeltaCSR threshold
+        to inf; ``snapshot`` mirrors the auto-checkpoint cadence the defer
+        flag suppressed on the journal hot path.
+        """
+        return {
+            "compact": self.delta.compaction_due(self._compact_frac),
+            "snapshot": (self._journal is not None
+                         and self._records_since_snapshot
+                         >= self._snapshot_every),
+        }
+
+    def maintain(self) -> list[str]:
+        """Run owed maintenance now (idle slot); returns actions performed.
+
+        This is the off-hot-path half of ``defer_maintenance=True``: the
+        pool calls it when a session has no queued work, so compaction and
+        snapshot cost never lands inside a request's latency budget.
+        """
+        due = self.maintenance_due()
+        done = []
+        if due["compact"]:
+            with span("compaction", overlay=self.delta.overlay_size,
+                      deferred=True):
+                self.delta.compact()
+            done.append("compact")
+        if due["snapshot"]:
+            self.checkpoint()
+            done.append("snapshot")
+        return done
+
+    def attach_durable(self, durable_dir: str) -> None:
+        """Late-enable durability (§17) on a live session — the spill hook.
+
+        Creates a fresh journal under ``durable_dir`` and writes a full
+        snapshot, after which the in-memory object can be dropped and
+        resumed bit-identically with ``restore(durable_dir)``.  A session
+        that is already durable just checkpoints.
+        """
+        if self._journal is not None:
+            self.checkpoint()
+            return
+        from repro.dynamic.journal import SessionJournal
+
+        self._journal = SessionJournal(durable_dir, fresh=True)
+        self._records_since_snapshot = 0
+        self.checkpoint()
 
     @classmethod
     def restore(cls, durable_dir: str) -> "ColoringSession":
@@ -481,6 +604,8 @@ class ColoringSession:
         self.delta = DeltaCSR.from_state(
             arrays, compact_frac=opts["compact_frac"],
             compactions=meta.get("compactions", 0))
+        if self._defer_maintenance:
+            self.delta.compact_frac = float("inf")
         self._counters = dict(meta["counters"])
         self.colors = np.asarray(arrays["colors"], np.int32)
         self.result = ColoringResult(

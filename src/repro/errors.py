@@ -1,0 +1,123 @@
+"""Unified error surface (DESIGN.md §19).
+
+Every refusal the repo can produce derives from ``ReproError``, so a
+serving layer can map *any* failure to a structured response with one
+``except ReproError`` clause and ``exc.payload()`` — no string matching:
+
+* ``IngestError``         — the §17 validating-ingest front door refused a
+  malformed CSR (defined in ``repro.ingest``; carries the structured
+  ``IngestReport``).  Re-exported here.
+* ``CapacityError``       — a packed-word / pack-budget refusal: an engine
+  was explicitly asked for a packed fast path whose operands cannot fit
+  the bit budget (``repro.ingest.packed_gather_ok`` and friends are the
+  budgets themselves).
+* ``NonConvergenceError`` — a speculative run exhausted ``max_iters``
+  without converging and the caller opted out of the §17 guarantee
+  ladder (``on_fail="raise"``).
+* ``Overloaded``          — the serving layer's structured backpressure
+  signal: the bounded request queue is full and the request was REJECTED
+  at admission rather than queued without bound (carries
+  ``queue_depth`` / ``limit`` / ``retry_after``).
+* ``SessionEvicted``      — a pooled session was evicted (LRU, no durable
+  spill) and its state is gone; the caller must re-open it.
+
+Compatibility: the pre-§19 raise sites used bare ``ValueError`` /
+``RuntimeError``, so the typed classes multiply-inherit from the legacy
+bases — existing ``except ValueError`` / ``except RuntimeError`` clauses
+(and tests) keep working unchanged.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "ReproError",
+    "IngestError",
+    "CapacityError",
+    "NonConvergenceError",
+    "Overloaded",
+    "SessionEvicted",
+]
+
+
+class ReproError(Exception):
+    """Base of every structured error the repro engines raise.
+
+    ``payload()`` renders the exception as a JSON-safe dict — the shape the
+    serving layer returns for a failed request.  Subclasses contribute
+    extra fields via ``_fields()``.
+    """
+
+    def _fields(self) -> dict:
+        return {}
+
+    def payload(self) -> dict:
+        out = {"error": type(self).__name__, "message": str(self)}
+        out.update(self._fields())
+        return out
+
+
+class CapacityError(ReproError, ValueError):
+    """An explicitly-requested packed fast path cannot hold its operands.
+
+    The §12/§13 packed-word formats have hard bit budgets
+    (``repro.ingest.PACKED_GATHER_MAX_DEG`` / ``PACKED_HALO_MAX_N``); the
+    engines REFUSE an explicit packed request past budget rather than
+    silently corrupting colors.
+    """
+
+
+class NonConvergenceError(ReproError, RuntimeError, ValueError):
+    """A speculative run exhausted its iteration budget without converging
+    and the caller asked for a refusal (``on_fail="raise"``) instead of
+    the §17 guarantee ladder.  Inherits both legacy bases: the dynamic
+    engine used to raise ``RuntimeError`` here, the bipartite compressor
+    ``ValueError``.
+    """
+
+
+class Overloaded(ReproError):
+    """Admission-control rejection: the bounded request queue is full.
+
+    The serving layer's backpressure contract (DESIGN.md §19): a queue at
+    its limit rejects *immediately* with this structured error instead of
+    growing without bound.  ``retry_after`` is a coarse hint (seconds)
+    derived from the service's recent drain rate.
+    """
+
+    def __init__(self, message: str, *, queue_depth: int, limit: int,
+                 retry_after: float = 0.0):
+        super().__init__(message)
+        self.queue_depth = int(queue_depth)
+        self.limit = int(limit)
+        self.retry_after = float(retry_after)
+
+    def _fields(self) -> dict:
+        return {"queue_depth": self.queue_depth, "limit": self.limit,
+                "retry_after": self.retry_after}
+
+
+class SessionEvicted(ReproError, LookupError):
+    """The addressed pooled session was LRU-evicted without durable spill.
+
+    Its in-memory state is gone and there is no journal to resurrect it
+    from; the client must re-open the session (services opened with a
+    ``spill_dir`` restore evicted sessions transparently instead of
+    raising this).
+    """
+
+    def __init__(self, message: str, *, session_id=None):
+        super().__init__(message)
+        self.session_id = session_id
+
+    def _fields(self) -> dict:
+        return {"session_id": self.session_id}
+
+
+def __getattr__(name):
+    # IngestError lives with its IngestReport in repro.ingest (which imports
+    # this module); re-export lazily to keep the surface unified without a
+    # circular import
+    if name == "IngestError":
+        from repro.ingest import IngestError
+
+        return IngestError
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -34,6 +34,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.csr import CSRGraph, csr_from_edges
+from repro.errors import ReproError
 
 __all__ = [
     "IngestError",
@@ -161,12 +162,21 @@ class IngestReport:
         )
 
 
-class IngestError(ValueError):
-    """Strict-policy refusal; ``.report`` carries the structured findings."""
+class IngestError(ReproError, ValueError):
+    """Strict-policy refusal; ``.report`` carries the structured findings.
+
+    Based on ``repro.errors.ReproError`` (§19) so the serving layer can map
+    it to a structured response; still a ``ValueError`` for pre-§19
+    ``except`` clauses.
+    """
 
     def __init__(self, report: IngestReport):
         self.report = report
         super().__init__(report.summary())
+
+    def _fields(self) -> dict:
+        return {"issues": dict(self.report.issues),
+                "repairs": [[a, int(c)] for a, c in self.report.repairs]}
 
 
 # --------------------------------------------------------------------------

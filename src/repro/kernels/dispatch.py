@@ -33,6 +33,8 @@ except in wall-clock.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 __all__ = ["resolve_backend", "kernel_mode", "BACKENDS"]
@@ -43,10 +45,18 @@ BACKENDS = ("jax", "pallas", "pallas-csr", "auto")
 def resolve_backend(backend: str | None, use_kernel: bool = False) -> str:
     """Resolve ``backend=`` to ``"jax"``, ``"pallas"`` or ``"pallas-csr"``.
 
-    ``use_kernel`` is the legacy per-call knob; it decides only when
-    ``backend`` is None or "auto" and conflicts loudly with
-    ``backend="jax"``.
+    ``use_kernel`` is the legacy per-call knob, DEPRECATED since §19: a
+    True value warns and keeps meaning the gathered-kernel path for one
+    more release (the compat shim), decides only when ``backend`` is None
+    or "auto", and conflicts loudly with ``backend="jax"``.  The unified
+    entry points translate it into ``backend=`` before reaching here
+    (``repro.options.ColorOptions.normalize``); this shim covers direct
+    engine calls.
     """
+    if use_kernel:
+        from repro.options import _DEPRECATION_MSG
+
+        warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=3)
     if backend is None:
         return "pallas" if use_kernel else "jax"
     if backend == "auto":

@@ -1,6 +1,9 @@
-"""Batched serving driver: prefill a batch of prompts, then decode greedily.
+"""Batched LM serving driver: prefill a batch of prompts, decode greedily.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+(Relocated from ``repro.launch.serve`` when the coloring service (§19) took
+the serving slot — see ``repro.launch.coloring_service``.)
+
+    PYTHONPATH=src python -m repro.launch.serve_lm --arch qwen3-4b --reduced \
         --batch 4 --prompt-len 16 --gen 24
 
 Uses the same prefill/decode_step paths the dry-run lowers at 32k/500k scale;

@@ -1,0 +1,240 @@
+"""``ColorOptions`` — the unified, frozen options object (DESIGN.md §19).
+
+Every coloring entry point (``repro.color``, ``repro.color_batch``,
+``repro.open_session``, the serving layer) accepts the same options two
+ways: loose keyword arguments, exactly as before, or one frozen
+``ColorOptions`` value::
+
+    opts = repro.ColorOptions(algorithm="fused", heuristic="id")
+    repro.color(g, opts)                       # options object
+    repro.color(g, "fused", heuristic="id")    # kwargs — same result, bit-identical
+
+Both spellings normalize into the SAME ``ColorOptions`` before any engine
+runs, so the two paths cannot drift.  The object is hashable (frozen
+dataclass, tuple-normalized contents), which is what the serving layer's
+micro-batcher keys its request buckets on: requests that share a
+``(pow2 shape class, ColorOptions)`` bucket share jit cache entries.
+
+Fields cover the knobs every engine understands — ``algorithm``,
+``engine``, ``backend``, ``heuristic``, ``firstfit``, ``validate_input``,
+``ensure_valid``, ``trace``, and the tail/iteration knobs ``tail_serial``
+/ ``max_iters``.  Algorithm-specific knobs (``mode``, ``tiling``,
+``strategy``, ``compact_frac``, ``devices``, …) ride along in ``extra``
+as a sorted tuple of pairs; entry points that cannot honor them refuse
+with the option names (this replaces ``color_batch``'s old hand-rolled
+``supported = {...}`` set).
+
+A field left at its default is *unset*: ``engine_kwargs()`` omits it, so
+the callee's own default applies and an options-object call stays
+bit-identical to the equivalent kwargs call.  ``tail_serial`` uses the
+``UNSET`` sentinel because ``None`` is a meaningful value there (disable
+the tail).
+
+The legacy ``use_kernel=`` knob is accepted one more release: it warns
+(``DeprecationWarning``) and normalizes into ``backend=`` —
+``use_kernel=True`` means ``backend="pallas"`` and still conflicts
+loudly with an explicit ``backend="jax"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+__all__ = ["ColorOptions", "UNSET"]
+
+
+class _Unset:
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):
+        return "UNSET"
+
+    def __reduce__(self):  # pickling round-trips to the singleton
+        return (_Unset, ())
+
+
+UNSET = _Unset()
+
+_DEPRECATION_MSG = (
+    "use_kernel= is deprecated; use backend='pallas' (use_kernel=True) or "
+    "drop it / backend='jax' (use_kernel=False).  The knob will be removed "
+    "next release."
+)
+_CONFLICT_MSG = (
+    "backend='jax' contradicts use_kernel=True; drop one of them "
+    "(backend='pallas' is the kernel path)"
+)
+
+
+def _freeze(value):
+    """Recursively tuple-ify lists/dicts so ColorOptions stays hashable."""
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(v) for v in value)
+    if isinstance(value, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in value.items()))
+    return value
+
+
+@dataclasses.dataclass(frozen=True)
+class ColorOptions:
+    """Frozen, hashable options for one coloring request (see module doc)."""
+
+    algorithm: str | None = None
+    engine: str | None = None
+    backend: str | None = None
+    heuristic: str | None = None
+    firstfit: str | None = None
+    validate_input: str | None = None
+    ensure_valid: bool = False
+    trace: Any = False
+    tail_serial: Any = UNSET
+    max_iters: int | None = None
+    extra: tuple = ()
+
+    def __post_init__(self):
+        # accept extra as a dict (the ergonomic spelling) and normalize to
+        # the canonical sorted-pair tuple; freeze list values so the whole
+        # object is hashable (the micro-batch bucket key)
+        object.__setattr__(self, "extra", _freeze(dict(self.extra)
+                                                  if isinstance(self.extra,
+                                                                dict)
+                                                  else dict(self.extra or ())))
+        object.__setattr__(
+            self, "tail_serial",
+            self.tail_serial if self.tail_serial is UNSET
+            else _freeze(self.tail_serial))
+        object.__setattr__(self, "trace", _freeze(self.trace))
+
+    # -- construction ------------------------------------------------------
+    _FIELDS = ("algorithm", "engine", "backend", "heuristic", "firstfit",
+               "validate_input", "ensure_valid", "trace", "tail_serial",
+               "max_iters")
+
+    @classmethod
+    def normalize(cls, options: "ColorOptions | None" = None, /,
+                  **kwargs) -> "ColorOptions":
+        """Merge loose ``kwargs`` over ``options`` into one ColorOptions.
+
+        This is the single normalization point every entry point routes
+        through: kwargs win over fields already set on ``options``,
+        unknown kwargs land in ``extra``, and the deprecated
+        ``use_kernel=`` knob is translated into ``backend=`` (with a
+        ``DeprecationWarning``; ``backend="jax"`` + ``use_kernel=True``
+        still raises).
+        """
+        if options is None:
+            options = cls()
+        elif not isinstance(options, ColorOptions):
+            raise TypeError(
+                f"options must be a ColorOptions, got {type(options).__name__}")
+        if not kwargs:
+            return options
+        fields = {}
+        extra = dict(options.extra)
+        if "use_kernel" in kwargs:
+            use_kernel = kwargs.pop("use_kernel")
+            warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=3)
+            backend = kwargs.get("backend", options.backend)
+            if use_kernel:
+                if backend == "jax":
+                    raise ValueError(_CONFLICT_MSG)
+                if backend in (None, "auto"):
+                    fields["backend"] = "pallas"
+        if "options" in kwargs:
+            raise TypeError(
+                "options= must be passed positionally or as the dedicated "
+                "keyword of the entry point, not inside the loose kwargs")
+        for key, value in kwargs.items():
+            if key in cls._FIELDS:
+                fields.setdefault(key, value)
+                if key in ("algorithm",) and value is None:
+                    fields.pop(key)  # positional default: keep options' value
+            else:
+                extra[key] = value
+        merged = {f.name: getattr(options, f.name)
+                  for f in dataclasses.fields(cls)}
+        merged.update(fields)
+        merged["extra"] = extra
+        return cls(**merged)
+
+    def merged(self, **kwargs) -> "ColorOptions":
+        """A copy with ``kwargs`` merged over this object (kwargs win)."""
+        return ColorOptions.normalize(self, **kwargs)
+
+    # -- consumption -------------------------------------------------------
+    def engine_kwargs(self) -> dict:
+        """The kwargs dict an algorithm adapter receives.
+
+        Only explicitly-set knobs are emitted (unset fields fall through to
+        the callee's own defaults), which is what makes the options path
+        bit-identical to the loose-kwargs path.  ``algorithm``,
+        ``validate_input`` and ``ensure_valid`` are consumed by the entry
+        point itself and never appear here.
+        """
+        out: dict = {}
+        for key in ("engine", "backend", "heuristic", "firstfit",
+                    "max_iters"):
+            value = getattr(self, key)
+            if value is not None:
+                out[key] = value
+        if self.tail_serial is not UNSET:
+            out["tail_serial"] = self.tail_serial
+        if self.trace:
+            out["trace"] = self.trace
+        out.update(self.extra_dict())
+        return out
+
+    def extra_dict(self) -> dict:
+        return dict(self.extra)
+
+    def session_kwargs(self) -> dict:
+        """The kwargs dict ``ColoringSession`` accepts (open_session path).
+
+        Same only-set-knobs contract as ``engine_kwargs``.  The session
+        pins its own engine (the ragged frontier engine, §14), so an
+        ``engine`` field is refused; ``ensure_valid=True`` maps to the
+        session's equivalent guarantee knob ``on_fail="ladder"`` unless an
+        explicit ``on_fail`` rides in ``extra``.
+        """
+        if self.engine is not None:
+            raise ValueError(
+                f"engine={self.engine!r} does not apply to sessions; the "
+                "streaming engine is fixed (ragged frontier recolors, §14)")
+        if self.algorithm not in (None, "dynamic"):
+            raise ValueError(
+                f"algorithm={self.algorithm!r} does not apply to sessions "
+                "(sessions ARE the 'dynamic' algorithm)")
+        out: dict = {}
+        for key in ("backend", "heuristic", "firstfit", "max_iters",
+                    "validate_input"):
+            value = getattr(self, key)
+            if value is not None:
+                out[key] = value
+        if self.tail_serial is not UNSET:
+            out["tail_serial"] = self.tail_serial
+        if self.trace:
+            out["trace"] = self.trace
+        out.update(self.extra_dict())
+        if self.ensure_valid:
+            out.setdefault("on_fail", "ladder")
+        return out
+
+    def describe(self) -> str:
+        """Compact one-line rendering of the set knobs (for logs/metrics)."""
+        parts = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "extra":
+                parts.extend(f"{k}={val!r}" for k, val in self.extra)
+            elif f.name == "tail_serial":
+                if v is not UNSET:
+                    parts.append(f"tail_serial={v!r}")
+            elif v not in (None, False):
+                parts.append(f"{f.name}={v!r}")
+        return "ColorOptions(" + ", ".join(parts) + ")"

@@ -114,6 +114,6 @@ def test_color_batch_fused_bad_opts_lists_supported():
     with pytest.raises(ValueError) as exc:
         repro.color_batch(graphs, algorithm="fused", mode="fused", buckets=(4,))
     msg = str(exc.value)
-    for opt in ("heuristic", "firstfit", "use_kernel", "max_iters"):
+    for opt in ("heuristic", "firstfit", "backend", "max_iters"):
         assert opt in msg                      # supported options are listed
     assert "buckets" in msg and "mode" in msg  # offending options are named

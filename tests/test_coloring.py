@@ -106,9 +106,9 @@ def test_quality_report():
     assert rep["valid"] and rep["num_colors"] <= rep["greedy_bound"]
 
 
-def test_use_kernel_path_matches():
+def test_kernel_backend_path_matches():
     g = erdos_renyi(600, 6.0, seed=5)
     plain = color_data_driven(g)
-    kern = color_data_driven(g, use_kernel=True)
+    kern = color_data_driven(g, backend="pallas")
     assert is_valid_coloring(g, kern.colors)
     assert (plain.colors == kern.colors).all()  # same deterministic schedule

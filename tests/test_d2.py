@@ -158,8 +158,8 @@ def test_distance2_onthefly_coarsened():
 
 def test_distance2_kernel_matches_reference_path():
     g = erdos_renyi(150, 4.0, seed=5)
-    rk = color_distance2(g, strategy="onthefly", use_kernel=True)
-    rn = color_distance2(g, strategy="onthefly", use_kernel=False)
+    rk = color_distance2(g, strategy="onthefly", backend="pallas")
+    rn = color_distance2(g, strategy="onthefly", backend="jax")
     assert (rk.colors == rn.colors).all()
     assert validate_d2(g, rk.colors)
 

@@ -224,10 +224,13 @@ def test_distance2_pallas_csr_bit_identical(gname):
 
 
 def test_pallas_equals_legacy_use_kernel():
-    """backend='pallas' IS the use_kernel path — same results, new spelling."""
+    """backend='pallas' IS the use_kernel path — same results, new spelling.
+
+    The old spelling stays one release as a shim (§19) and must warn."""
     g = _graph("rmat-er")
     new = color_data_driven(g, backend="pallas")
-    old = color_data_driven(g, use_kernel=True)
+    with pytest.deprecated_call(match="use_kernel"):
+        old = color_data_driven(g, use_kernel=True)
     np.testing.assert_array_equal(new.colors, old.colors)
     assert new.iterations == old.iterations
 

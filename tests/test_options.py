@@ -1,0 +1,199 @@
+"""§19 ColorOptions: normalization, bit-identity with kwargs, deprecation.
+
+The contract under test: every entry point accepts options two ways —
+a frozen ``ColorOptions`` or the equivalent loose kwargs — and BOTH
+normalize into the same object before any engine runs, so results are
+bit-identical across spellings.  The legacy ``use_kernel=`` knob warns
+and translates to ``backend=`` for one release.
+"""
+import dataclasses
+import pickle
+
+import numpy as np
+import pytest
+
+import repro
+from repro import ColorOptions
+from repro.core import csr_from_edges
+from repro.options import UNSET
+
+
+def _graph(n=80, m=400, seed=0):
+    rng = np.random.default_rng(seed)
+    return csr_from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m))
+
+
+# --------------------------------------------------------------------------
+# the object itself
+# --------------------------------------------------------------------------
+
+def test_frozen_hashable_and_picklable():
+    o = ColorOptions(algorithm="fused", heuristic="id",
+                     extra={"mode": "forward"})
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        o.heuristic = "degree"
+    assert hash(o) == hash(ColorOptions(algorithm="fused", heuristic="id",
+                                        extra={"mode": "forward"}))
+    back = pickle.loads(pickle.dumps(o))
+    assert back == o
+    assert back.tail_serial is UNSET          # sentinel survives pickling
+
+
+def test_normalize_kwargs_win_and_unknown_go_to_extra():
+    base = ColorOptions(algorithm="fused", heuristic="degree")
+    o = ColorOptions.normalize(base, heuristic="id", tiling=(4, 64))
+    assert o.heuristic == "id"                # kwargs over options
+    assert o.algorithm == "fused"             # untouched field preserved
+    assert o.extra_dict() == {"tiling": (4, 64)}
+    assert ColorOptions.normalize(base) is base   # no kwargs: no copy
+
+
+def test_unset_fields_are_omitted_from_engine_kwargs():
+    assert ColorOptions().engine_kwargs() == {}
+    kw = ColorOptions(heuristic="id", max_iters=7).engine_kwargs()
+    assert kw == {"heuristic": "id", "max_iters": 7}
+    assert ColorOptions(tail_serial=None).engine_kwargs() == {
+        "tail_serial": None}                  # None is meaningful here
+
+
+def test_session_kwargs_refuses_foreign_fields():
+    with pytest.raises(ValueError, match="engine"):
+        ColorOptions(engine="sharded").session_kwargs()
+    with pytest.raises(ValueError, match="algorithm"):
+        ColorOptions(algorithm="fused").session_kwargs()
+    assert ColorOptions(algorithm="dynamic").session_kwargs() == {}
+    assert (ColorOptions(ensure_valid=True).session_kwargs()
+            == {"on_fail": "ladder"})
+
+
+def test_merged_and_describe():
+    o = ColorOptions(algorithm="fused").merged(heuristic="id")
+    assert (o.algorithm, o.heuristic) == ("fused", "id")
+    assert "heuristic='id'" in o.describe()
+
+
+# --------------------------------------------------------------------------
+# bit-identity: options object path == loose kwargs path
+# --------------------------------------------------------------------------
+
+_MATRIX = [
+    dict(algorithm="fused"),
+    dict(algorithm="fused", heuristic="id"),
+    dict(algorithm="fused", backend="jax", tail_serial=None),
+    dict(algorithm="data_driven", heuristic="degree"),
+    dict(algorithm="topology"),
+    dict(algorithm="distance2"),
+]
+
+
+@pytest.mark.parametrize("knobs", _MATRIX,
+                         ids=lambda k: ",".join(f"{a}={v}"
+                                                for a, v in k.items()))
+def test_color_options_path_bit_identical_to_kwargs(knobs):
+    g = _graph()
+    via_kwargs = repro.color(g, **knobs)
+    via_options = repro.color(g, options=ColorOptions(**knobs))
+    positional = repro.color(g, ColorOptions(**knobs))
+    np.testing.assert_array_equal(via_kwargs.colors, via_options.colors)
+    np.testing.assert_array_equal(via_kwargs.colors, positional.colors)
+    assert via_kwargs.num_colors == via_options.num_colors
+
+
+@pytest.mark.parametrize("engine", [None, "sharded"])
+def test_color_batch_options_path_bit_identical(engine):
+    graphs = [_graph(seed=s) for s in range(3)]
+    knobs = {"heuristic": "id"}
+    if engine is not None:
+        knobs["engine"] = engine
+    via_kwargs = repro.color_batch(graphs, "fused", **knobs)
+    via_options = repro.color_batch(
+        graphs, options=ColorOptions(algorithm="fused", **knobs))
+    for a, b in zip(via_kwargs, via_options):
+        np.testing.assert_array_equal(a.colors, b.colors)
+
+
+def test_open_session_options_path_bit_identical():
+    g = _graph()
+    a = repro.open_session(g, heuristic="id")
+    b = repro.open_session(g, options=ColorOptions(heuristic="id"))
+    rng_a, rng_b = np.random.default_rng(5), np.random.default_rng(5)
+    for s, rng in ((a, rng_a), (b, rng_b)):
+        s.apply_delta(add_edges=(rng.integers(0, g.n, 20),
+                                 rng.integers(0, g.n, 20)))
+        s.recolor()
+    np.testing.assert_array_equal(a.colors, b.colors)
+
+
+def test_color_batch_refuses_foreign_extra_by_name():
+    with pytest.raises(ValueError, match="tiling"):
+        repro.color_batch([_graph()], "fused", tiling=(4, 32))
+
+
+def test_positional_options_conflicts_with_options_kw():
+    o = ColorOptions(algorithm="fused")
+    with pytest.raises(TypeError):
+        repro.color(_graph(), o, options=o)
+
+
+# --------------------------------------------------------------------------
+# use_kernel deprecation shim
+# --------------------------------------------------------------------------
+
+def test_use_kernel_true_warns_and_maps_to_pallas():
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        o = ColorOptions.normalize(None, use_kernel=True)
+    assert o.backend == "pallas"
+
+
+def test_use_kernel_false_warns_and_leaves_backend_unset():
+    with pytest.warns(DeprecationWarning):
+        o = ColorOptions.normalize(None, use_kernel=False)
+    assert o.backend is None
+
+
+def test_use_kernel_conflicts_with_jax_backend():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="contradicts"):
+            ColorOptions.normalize(None, use_kernel=True, backend="jax")
+
+
+def test_use_kernel_through_color_entry_point():
+    g = _graph()
+    with pytest.warns(DeprecationWarning):
+        r = repro.color(g, "fused", use_kernel=False)
+    np.testing.assert_array_equal(r.colors,
+                                  repro.color(g, "fused").colors)
+
+
+def test_no_in_repo_callers_pass_use_kernel():
+    """The migration is complete: no in-repo code calls a PUBLIC entry
+    point with the deprecated ``use_kernel=`` knob.  Shim-coverage tests
+    are whitelisted; internal helpers below the ``resolve_backend``
+    boundary (``ragged_superstep`` & co.) keep a ``use_kernel`` parameter
+    carrying the already-resolved kernel mode — that is not the knob."""
+    import ast
+    import pathlib
+
+    public = {"color", "color_batch", "open_session", "color_data_driven",
+              "color_distance2", "color_bipartite"}
+    root = pathlib.Path(__file__).resolve().parent.parent
+    allowed = {root / "tests" / "test_options.py",
+               root / "tests" / "test_differential.py",
+               root / "tests" / "test_sharded.py"}
+    offenders = []
+    for sub in ("src", "examples", "benchmarks", "tests"):
+        for path in (root / sub).rglob("*.py"):
+            if path in allowed:
+                continue
+            for node in ast.walk(ast.parse(path.read_text())):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = (node.func.id if isinstance(node.func, ast.Name)
+                        else node.func.attr
+                        if isinstance(node.func, ast.Attribute) else None)
+                if (name in public
+                        and any(k.arg == "use_kernel"
+                                for k in node.keywords)):
+                    offenders.append(
+                        f"{path.relative_to(root)}:{node.lineno}")
+    assert not offenders, offenders

@@ -325,6 +325,89 @@ def test_write_baseline_accepts_current_degradations():
     assert fails == []
 
 
+def _schema9_doc():
+    # the real serving document (benchmarks/serve.py) carries ONLY the
+    # serve section — no algorithms/dynamic records ride along
+    doc = {"schema": 9, "scale": 0.01, "backend": "jax"}
+    doc["serve"] = {
+        "steady": {"p50_ms": 3.0, "p99_ms": 8.0, "rejection_rate": 0.0,
+                   "jit_misses_after_warmup": 0, "submitted": 240,
+                   "completed": 240, "rejected": 0, "queue_peak": 4},
+        "overload": {"submitted": 96, "completed": 32, "rejected": 64,
+                     "queue_peak": 32, "queue_limit": 32},
+    }
+    return doc
+
+
+SCHEMA9_BASELINE = make_baseline([_schema9_doc()])
+
+
+def test_schema9_clean_serve_document_passes():
+    fails, _ = check(_schema9_doc(), SCHEMA9_BASELINE)
+    assert fails == []
+    assert SCHEMA9_BASELINE["serve"]["max_jit_misses_after_warmup"] == 0
+
+
+def test_schema9_tail_latency_blowup_fails():
+    doc = _schema9_doc()
+    doc["serve"]["steady"]["p99_ms"] = 9.5  # > 3 x 3.0
+    fails, _ = check(doc, SCHEMA9_BASELINE)
+    assert any("tail latency blowup" in f for f in fails)
+    doc["serve"]["steady"]["p50_ms"] = 0
+    fails, _ = check(doc, SCHEMA9_BASELINE)
+    assert any("p50_ms 0 <= 0" in f for f in fails)
+
+
+def test_schema9_steady_rejections_fail():
+    doc = _schema9_doc()
+    doc["serve"]["steady"]["rejection_rate"] = 0.1
+    fails, _ = check(doc, SCHEMA9_BASELINE)
+    assert any("sheds load" in f for f in fails)
+
+
+def test_schema9_jit_miss_after_warmup_fails():
+    doc = _schema9_doc()
+    doc["serve"]["steady"]["jit_misses_after_warmup"] = 1
+    fails, _ = check(doc, SCHEMA9_BASELINE)
+    assert any("left the \njit cache".replace("\n", "") in f for f in fails)
+
+
+def test_schema9_lost_requests_fail():
+    doc = _schema9_doc()
+    doc["serve"]["steady"]["completed"] = 239  # 239 + 0 != 240
+    fails, _ = check(doc, SCHEMA9_BASELINE)
+    assert any("requests were lost" in f for f in fails)
+
+
+def test_schema9_overload_must_reject_and_stay_bounded():
+    doc = _schema9_doc()
+    doc["serve"]["overload"]["rejected"] = 0
+    fails, _ = check(doc, SCHEMA9_BASELINE)
+    assert any("backpressure is not engaging" in f for f in fails)
+    doc = _schema9_doc()
+    doc["serve"]["overload"]["queue_peak"] = 40  # past limit 32
+    fails, _ = check(doc, SCHEMA9_BASELINE)
+    assert any("bound is not enforced" in f for f in fails)
+    doc = _schema9_doc()
+    del doc["serve"]["overload"]
+    fails, _ = check(doc, SCHEMA9_BASELINE)
+    assert any("missing its 'overload' section" in f for f in fails)
+
+
+def test_schema9_baseline_can_widen_the_caps():
+    doc = _schema9_doc()
+    doc["serve"]["steady"]["p99_ms"] = 11.0
+    doc["serve"]["steady"]["rejection_rate"] = 0.05
+    base = copy.deepcopy(SCHEMA9_BASELINE)
+    base["serve"]["max_p99_over_p50"] = 4.0
+    base["serve"]["max_steady_rejection_rate"] = 0.1
+    fails, _ = check(doc, base)
+    assert fails == []
+    # a non-serve document never trips the serve gates
+    fails, _ = check(DOC, SCHEMA9_BASELINE)
+    assert fails == []
+
+
 def test_main_exit_codes_and_baseline_roundtrip(tmp_path):
     doc_path = tmp_path / "bench.json"
     base_path = tmp_path / "baseline.json"
@@ -363,3 +446,7 @@ def test_checked_in_baseline_matches_repo_layout():
         for rec in base["algorithms"][alg].values():
             assert rec["supersteps"] > 0
             assert rec["tail_step"] >= -1
+    # schema-9 serving gates (§19): the zero-miss cap is the contract
+    assert base["serve"]["max_jit_misses_after_warmup"] == 0
+    assert base["serve"]["max_p99_over_p50"] <= 3.0
+    assert base["serve"]["max_steady_rejection_rate"] <= 0.02

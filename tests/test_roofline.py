@@ -44,16 +44,16 @@ def test_star_graph_known_bytes():
 
 
 @pytest.mark.parametrize("mode", ["workefficient", "fused"])
-@pytest.mark.parametrize("use_kernel", [False, True])
-def test_class_cells_partition_padded_work(mode, use_kernel):
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_class_cells_partition_padded_work(mode, backend):
     """Invariant: the per-class cells PARTITION the engine's padded_work —
     the roofline model accounts for every gather cell exactly once."""
     rng = np.random.default_rng(5)
     src = rng.integers(0, 400, 2400)
     dst = rng.integers(0, 400, 2400)
     g = csr_from_edges(400, src[src != dst], dst[src != dst])
-    r = color_data_driven(g, mode=mode, use_kernel=use_kernel)
-    assert r.class_cells, (mode, use_kernel)
+    r = color_data_driven(g, mode=mode, backend=backend)
+    assert r.class_cells, (mode, backend)
     assert sum(c for _, c in r.class_cells) == r.padded_work
     assert all(w > 0 and c > 0 for w, c in r.class_cells)
 

@@ -1,0 +1,287 @@
+"""§19 ColoringService: admission, backpressure, eviction, micro-batching.
+
+The service is a worker thread behind a bounded queue, so these tests
+prefer SYNCHRONOUS submissions (deterministic one-request micro-batches)
+except where the point is the async path itself — async drain cycles are
+timing-dependent and any assertion on how requests happened to coalesce
+would flake.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core import csr_from_edges, is_valid_coloring
+from repro.errors import Overloaded, ReproError, SessionEvicted
+from repro.launch.coloring_service import ColoringService
+
+
+def _graph(n=60, m=240, seed=0):
+    rng = np.random.default_rng(seed)
+    return csr_from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m))
+
+
+@pytest.fixture()
+def svc():
+    s = ColoringService(pool_size=4, queue_limit=16, max_batch=8)
+    yield s
+    s.shutdown()
+
+
+# --------------------------------------------------------------------------
+# one-shot coloring through the micro-batcher
+# --------------------------------------------------------------------------
+
+def test_color_bit_identical_to_direct(svc):
+    g = _graph()
+    served = svc.color(g)
+    direct = repro.color(g, "fused")
+    np.testing.assert_array_equal(served.colors, direct.colors)
+    assert served.num_colors == direct.num_colors
+
+
+def test_color_async_burst_all_valid_and_identical(svc):
+    graphs = [_graph(seed=s) for s in range(6)]
+    tickets = [svc.color(g, wait=False) for g in graphs]
+    results = [t.wait(60) for t in tickets]
+    for g, r in zip(graphs, results):
+        assert is_valid_coloring(g, r.colors)
+        np.testing.assert_array_equal(r.colors, repro.color(g, "fused").colors)
+    m = svc.metrics()
+    assert m["completed"] == len(graphs)
+    assert m["batched_requests"] == len(graphs)
+
+
+def test_bucket_jit_key_is_stable_across_repeats(svc):
+    g = _graph()
+    svc.color(g)                       # first presentation compiles
+    before = svc.metrics()["bucket_jit_misses"]
+    for _ in range(4):                 # same (bucket, B=1) key every time
+        svc.color(g)
+    after = svc.metrics()["bucket_jit_misses"]
+    assert after == before
+    assert svc.metrics()["bucket_jit_hits"] >= 4
+
+
+def test_incompatible_options_take_slow_path(svc):
+    g = _graph()
+    r = svc.color(g, ensure_valid=True)   # ladder is per-request only
+    assert is_valid_coloring(g, r.colors)
+    assert svc.metrics()["slow_requests"] == 1
+
+
+def test_distinct_options_get_distinct_buckets(svc):
+    g = _graph()
+    svc.color(g)
+    svc.color(g, heuristic="id")
+    assert len(svc.metrics()["buckets"]) == 2
+
+
+def test_request_errors_cross_the_thread_boundary(svc):
+    with pytest.raises(KeyError):
+        svc.recolor("never-opened")
+    with pytest.raises(TypeError):
+        svc.open_session("bad", object())
+    assert svc.metrics()["failed"] == 2
+
+
+# --------------------------------------------------------------------------
+# backpressure: bounded queue, structured Overloaded
+# --------------------------------------------------------------------------
+
+def test_overload_rejects_structured_and_bounded():
+    g = _graph()
+    with ColoringService(pool_size=2, queue_limit=4, max_batch=2) as svc:
+        tickets, errors = [], []
+        for _ in range(40):
+            try:
+                tickets.append(svc.color(g, wait=False))
+            except Overloaded as e:
+                errors.append(e)
+        for t in tickets:
+            assert is_valid_coloring(g, t.wait(60).colors)
+        assert errors, "flooding a queue_limit=4 service must shed load"
+        e = errors[0]
+        assert isinstance(e, ReproError)
+        assert e.limit == 4 and e.queue_depth >= e.limit
+        assert e.retry_after >= 0.0
+        p = e.payload()
+        assert p["error"] == "Overloaded" and p["limit"] == 4
+        m = svc.metrics()
+        assert m["rejected"] == len(errors)
+        assert m["completed"] + m["rejected"] == 40
+
+
+def test_shutdown_refuses_new_work(svc):
+    svc.shutdown()
+    with pytest.raises(RuntimeError):
+        svc.color(_graph())
+
+
+# --------------------------------------------------------------------------
+# session pool: LRU admission, eviction, spill/restore
+# --------------------------------------------------------------------------
+
+def test_eviction_without_spill_is_structured():
+    g = _graph()
+    with ColoringService(pool_size=1, queue_limit=16) as svc:
+        svc.open_session("a", g)
+        out = svc.open_session("b", g)
+        assert out["evicted"] == "a"
+        with pytest.raises(SessionEvicted) as ei:
+            svc.colors("a")
+        assert ei.value.session_id == "a"
+        assert ei.value.payload()["error"] == "SessionEvicted"
+        assert svc.metrics()["evictions"] == 1
+
+
+def test_eviction_spills_and_restores(tmp_path):
+    g = _graph()
+    with ColoringService(pool_size=1, queue_limit=16,
+                         spill_dir=str(tmp_path)) as svc:
+        svc.open_session("a", g)
+        svc.apply_delta("a", add_edges=(np.array([0, 1]), np.array([2, 3])))
+        svc.recolor("a")
+        want = svc.colors("a")
+        svc.open_session("b", g)              # evicts "a" to disk
+        assert svc.metrics()["spills"] == 1
+        got = svc.colors("a")                 # transparent restore (LRU bump)
+        np.testing.assert_array_equal(got, want)
+        m = svc.metrics()
+        assert m["restores"] == 1 and m["pool_occupancy"] == 1
+
+
+def test_session_ops_match_direct_session(svc):
+    g = _graph()
+    svc.open_session("s", g, heuristic="id")
+    direct = repro.open_session(g, heuristic="id")
+    rng_a, rng_b = np.random.default_rng(7), np.random.default_rng(7)
+    for _ in range(3):
+        add = (rng_a.integers(0, g.n, 8), rng_a.integers(0, g.n, 8))
+        svc.apply_delta("s", add_edges=add)
+        svc.recolor("s")
+        direct.apply_delta(add_edges=(rng_b.integers(0, g.n, 8),
+                                      rng_b.integers(0, g.n, 8)))
+        direct.recolor()
+    np.testing.assert_array_equal(svc.colors("s"), direct.colors)
+    assert (svc.session_metrics("s")["recolors"]
+            == direct.metrics()["recolors"])
+
+
+def test_reopen_replaces_and_close_forgets(svc):
+    g = _graph()
+    svc.open_session("s", g)
+    svc.apply_delta("s", add_edges=(np.array([0]), np.array([5])))
+    svc.open_session("s", g)                  # replace: pending delta gone
+    np.testing.assert_array_equal(svc.colors("s"),
+                                  repro.open_session(g).colors)
+    assert svc.close_session("s") is True
+    assert svc.close_session("s") is False
+    with pytest.raises(KeyError):
+        svc.colors("s")
+
+
+def test_maintain_compacts_deferred_overlays(svc):
+    g = _graph()
+    svc.open_session("s", g)
+    rng = np.random.default_rng(3)
+    for _ in range(12):                       # grow overlays past the due
+        svc.apply_delta("s", add_edges=(rng.integers(0, g.n, 30),
+                                        rng.integers(0, g.n, 30)))
+        svc.recolor("s")
+    done = svc.maintain("s")
+    assert "compact" in done["s"]
+    assert svc.maintain() == {"s": []}        # sweep: nothing left due
+    assert is_valid_coloring(svc._touch("s").graph, svc.colors("s"))
+
+
+# --------------------------------------------------------------------------
+# durability: checkpoint -> kill -> restore (faultlab scenario, §17 x §19)
+# --------------------------------------------------------------------------
+
+def test_spilled_session_survives_service_kill(tmp_path):
+    from repro.dynamic.session import ColoringSession
+
+    g = _graph(n=120, m=600, seed=4)
+    ref = repro.open_session(g)
+    rng = np.random.default_rng(11)
+
+    svc = ColoringService(pool_size=1, queue_limit=16,
+                          spill_dir=str(tmp_path))
+    svc.open_session("live", g)
+    for _ in range(5):
+        k = 10
+        a, b = rng.integers(0, g.n, k), rng.integers(0, g.n, k)
+        svc.apply_delta("live", add_edges=(a, b))
+        svc.recolor("live")
+        ref.apply_delta(add_edges=(a, b))
+        ref.recolor()
+    svc.open_session("other", g)              # spill "live" durably
+    svc.shutdown()                            # the "kill"
+    del svc
+
+    rest = ColoringSession.restore(str(tmp_path / "live"))
+    assert rest.recovery is not None and not rest.recovery["truncated"]
+    np.testing.assert_array_equal(rest.colors, ref.colors)
+    # post-restore lockstep: restored session behaves like the original
+    a, b = rng.integers(0, g.n, 10), rng.integers(0, g.n, 10)
+    rest.apply_delta(add_edges=(a, b))
+    rest.recolor()
+    ref.apply_delta(add_edges=(a, b))
+    ref.recolor()
+    np.testing.assert_array_equal(rest.colors, ref.colors)
+
+
+def test_spill_journal_corruption_is_detected(tmp_path):
+    from repro import faultlab
+    from repro.dynamic.session import ColoringSession
+
+    g = _graph(seed=5)
+    svc = ColoringService(pool_size=1, queue_limit=16,
+                          spill_dir=str(tmp_path))
+    svc.open_session("live", g)
+    svc.open_session("other", g)              # spill "live": snapshot on disk
+    svc.colors("live")                        # restore; journal reattached
+    rng = np.random.default_rng(2)
+    for _ in range(4):                        # journaled through the service
+        svc.apply_delta("live", add_edges=(rng.integers(0, g.n, 8),
+                                           rng.integers(0, g.n, 8)))
+        svc.recolor("live")
+    svc.shutdown()
+
+    faultlab.truncate_journal(str(tmp_path / "live"), mode="tear")
+    rest = ColoringSession.restore(str(tmp_path / "live"))
+    assert rest.recovery["truncated"]         # detector fires
+    # the torn tail may have cut a recolor record, leaving its delta's
+    # frontier legitimately pending — one repair restores validity
+    rest.recolor()
+    assert rest.validate()
+
+
+# --------------------------------------------------------------------------
+# telemetry
+# --------------------------------------------------------------------------
+
+def test_trace_spans_cover_requests_and_microbatches():
+    g = _graph()
+    with ColoringService(pool_size=2, queue_limit=16, trace=True) as svc:
+        svc.open_session("s", g)
+        svc.recolor("s")
+        svc.color(g)
+        names = {e.name for e in svc.take_spans()}
+    assert "serve_request" in names and "serve_microbatch" in names
+    assert svc.take_spans() == []             # drained
+
+
+def test_metrics_shape():
+    g = _graph()
+    with ColoringService(pool_size=2, queue_limit=16) as svc:
+        svc.open_session("s", g)
+        svc.color(g)
+        m = svc.metrics()
+    for key in ("admitted", "completed", "rejected", "queue_depth",
+                "queue_limit", "pool_occupancy", "pool_size",
+                "bucket_jit_hits", "bucket_jit_misses",
+                "session_engine_cache_hits", "session_engine_cache_misses",
+                "ewma_request_seconds", "buckets"):
+        assert key in m, key
+    assert m["pool_occupancy"] == 1 and m["queue_depth"] == 0

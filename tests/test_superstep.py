@@ -155,11 +155,11 @@ def test_superstep_kernel_worklist_smaller_than_block():
         np.testing.assert_array_equal(np.asarray(got_n), np.asarray(want_n))
 
 
-def test_use_kernel_matches_pure_jax_engine():
+def test_kernel_backend_matches_pure_jax_engine():
     g = GRAPHS["er"]()
     for mode in ("workefficient", "fused"):
         plain = color_data_driven(g, mode=mode)
-        kern = color_data_driven(g, mode=mode, use_kernel=True)
+        kern = color_data_driven(g, mode=mode, backend="pallas")
         assert (plain.colors == kern.colors).all(), mode
         assert plain.iterations == kern.iterations
 

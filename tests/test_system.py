@@ -50,7 +50,7 @@ def test_quickstart_example():
 
 def test_serve_driver():
     from repro.configs import get_config
-    from repro.launch.serve import serve_batch
+    from repro.launch.serve_lm import serve_batch
 
     cfg = get_config("qwen3-4b").reduced()
     out = serve_batch(cfg, batch=2, prompt_len=8, gen=6)
